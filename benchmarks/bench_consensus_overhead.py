@@ -1,0 +1,89 @@
+"""Beyond the paper's figures: the central PoFEL claim quantified — the
+consensus adds negligible cost on top of FEL training because it recycles
+the training computation (paper §1, §4).
+
+We measure, on the CPU-scale BHFL runtime, the wall-time split of one BCFL
+round into (FEL training) vs (PoFEL consensus = HCDS + ME + BTSV + block),
+and for the LLM-scale path the analytic FLOP overhead of the in-graph
+consensus vs the local FedSGD step (launch/costs.py formulas).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.configs.shapes import INPUT_SHAPES
+from repro.data.synthetic import make_mnist_like
+from repro.fl.hierarchy import build_hierarchy
+from repro.fl.hfl_runtime import BHFLConfig, BHFLRuntime
+from repro.models.model_api import Model
+
+
+def bench_runtime_split(rounds: int = 4) -> None:
+    train, _ = make_mnist_like(n_train=1200, n_test=100)
+    cfg = BHFLConfig(n_nodes=5, clients_per_node=3, fel_iterations=2)
+    clusters = build_hierarchy(train, 5, 3, "iid")
+    rt = BHFLRuntime(clusters, cfg, None)
+
+    import jax
+    from repro.core.model_eval import model_evaluation_pytrees
+    from repro.core.btsv import btsv_round, init_history
+    import jax.numpy as jnp
+
+    fel_t, cons_t, me_t = 0.0, 0.0, 0.0
+    hist = init_history(cfg.n_nodes)
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        models = [rt._run_fel(c, rt.global_params, round_seed=rt.consensus.round + 1)
+                  for c in rt.clusters]
+        t1 = time.perf_counter()
+        # ME + BTSV alone (the in-graph part of consensus)
+        me = model_evaluation_pytrees(models,
+                                      [float(c.data_size) for c in rt.clusters])
+        votes = jnp.full((cfg.n_nodes,), me.vote)
+        P = jnp.broadcast_to(me.predictions, (cfg.n_nodes, cfg.n_nodes))
+        res, hist = btsv_round(votes, P, hist)
+        jax.block_until_ready(res.leader)
+        t_me = time.perf_counter()
+        sizes = [float(c.data_size) for c in rt.clusters]
+        rec = rt.consensus.run_round(models, sizes)   # full (incl. HCDS/chain)
+        from repro.fl.hfl_runtime import _unflatten_like
+        rt.global_params = _unflatten_like(rec.global_model, rt.global_params)
+        t2 = time.perf_counter()
+        fel_t += t1 - t0
+        me_t += t_me - t1
+        cons_t += t2 - t_me
+    frac_full = cons_t / (fel_t + cons_t)
+    frac_me = me_t / (fel_t + me_t)
+    emit("consensus_overhead/runtime_full", cons_t / rounds * 1e6,
+         f"fraction={frac_full:.4f} (pure-Python ECDSA dominates; a C "
+         f"library is ~100x faster — see EXPERIMENTS.md)")
+    emit("consensus_overhead/runtime_me_btsv", me_t / rounds * 1e6,
+         f"fraction={frac_me:.4f}")
+
+
+def bench_analytic_overhead() -> None:
+    """In-graph consensus FLOPs vs local-step FLOPs per PoFEL round."""
+    from repro.launch.costs import forward_cost
+    shape = INPUT_SHAPES["train_4k"]
+    C = 8
+    for arch in ("yi-6b", "deepseek-moe-16b", "rwkv6-1.6b"):
+        model = Model(get_config(arch))
+        fwd = forward_cost(model, shape.global_batch, shape.seq_len)
+        train_flops = 4.0 * fwd.flops
+        consensus_flops = 8.0 * C * model.n_params() + 2.0 * C * model.n_params()
+        emit(f"consensus_overhead/analytic/{arch}", 0.0,
+             f"fraction={consensus_flops / (train_flops + consensus_flops):.2e}")
+
+
+def main() -> None:
+    bench_runtime_split()
+    bench_analytic_overhead()
+
+
+if __name__ == "__main__":
+    main()

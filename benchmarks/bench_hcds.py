@@ -1,0 +1,104 @@
+"""Paper Figs. 4-5: HCDS Commit/Reveal computation cost.
+
+Fig. 4(a): H + DSign cost vs (random nonce length × model complexity)
+Fig. 4(b): DVerify cost vs network size N
+Fig. 5(a): Reveal cost vs (N × nonce length)
+Fig. 5(b): Reveal cost vs (N × model complexity)
+
+Model complexity is swept exactly as in the paper: the MLP hidden layer
+width (§7.2, "we change the number of neurons in the hidden layer").
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import crypto
+from repro.core.hcds import HCDSNode
+from repro.core.serialization import serialize_pytree
+from repro.models.mlp import MLPConfig, mlp_init
+
+NONCE_LENS = [16, 64, 256, 1024]
+HIDDEN = [64, 128, 256]
+NET_SIZES = [10, 25, 50]
+
+
+def _model(hidden: int):
+    return mlp_init(MLPConfig(hidden=hidden), jax.random.key(0))
+
+
+def bench_commit_stage() -> None:
+    """Fig. 4(a): time of H(r‖w) + DSign vs nonce length and model size."""
+    kp = crypto.ECDSAKeyPair.generate(b"bench")
+    for hidden in HIDDEN:
+        model_bytes = serialize_pytree(_model(hidden))
+        for nlen in NONCE_LENS:
+            nonce = crypto.random_nonce(nlen)
+
+            def commit():
+                d = crypto.sha256_digest(nonce, model_bytes)
+                crypto.dsign(d, kp.private_key)
+
+            us = time_call(commit, repeats=5)
+            emit(f"hcds_commit/h{hidden}/nonce{nlen}", us,
+                 f"model_bytes={len(model_bytes)}")
+
+
+def bench_dverify_vs_network() -> None:
+    """Fig. 4(b): DVerify cost grows linearly with N."""
+    kp = crypto.ECDSAKeyPair.generate(b"bench")
+    d = crypto.sha256_digest(b"digest")
+    tag = crypto.dsign(d, kp.private_key)
+    for n in NET_SIZES:
+        def verify_all():
+            for _ in range(n - 1):
+                assert crypto.dverify(tag, kp.public_key, d)
+
+        us = time_call(verify_all, repeats=3)
+        emit(f"hcds_commit_verify/N{n}", us, f"per_node={us/(n-1):.1f}us")
+
+
+def bench_reveal_stage() -> None:
+    """Fig. 5: Reveal = hash recompute + DVerify per peer, vs N and model."""
+    kp = crypto.ECDSAKeyPair.generate(b"bench")
+    for hidden in [64, 256]:
+        model_bytes = serialize_pytree(_model(hidden))
+        nonce = crypto.random_nonce(32)
+        d = crypto.sha256_digest(nonce, model_bytes)
+        tag = crypto.dsign(d, kp.private_key)
+        for n in NET_SIZES:
+            def reveal_all():
+                for _ in range(n - 1):
+                    dd = crypto.sha256_digest(nonce, model_bytes)
+                    assert dd == d
+                    assert crypto.dverify(tag, kp.public_key, dd)
+
+            us = time_call(reveal_all, repeats=3)
+            emit(f"hcds_reveal/h{hidden}/N{n}", us, f"per_node={us/(n-1):.1f}us")
+
+
+def bench_full_round_protocol() -> None:
+    """End-to-end HCDS round among N in-process nodes (beyond-paper)."""
+    from repro.core.hcds import run_hcds_round
+    for n in [5, 10]:
+        nodes = [HCDSNode(i) for i in range(n)]
+        models = [_model(64) for _ in range(n)]
+
+        def round_():
+            run_hcds_round(nodes, models, round=np.random.randint(1 << 30))
+
+        us = time_call(round_, repeats=2, warmup=0)
+        emit(f"hcds_full_round/N{n}", us, f"msgs={n*(n-1)*2}")
+
+
+def main() -> None:
+    bench_commit_stage()
+    bench_dverify_vs_network()
+    bench_reveal_stage()
+    bench_full_round_protocol()
+
+
+if __name__ == "__main__":
+    main()

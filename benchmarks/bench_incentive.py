@@ -1,0 +1,87 @@
+"""Paper Fig. 8: Stackelberg utilities.
+
+8(a) U_tp vs F (δ=5000)      — inverse relationship
+8(b) U_i vs δ (f_i=40)       — linear relationship
+8(c) U_tp vs δ (F=1000)      — concave with optimum δ* = F φ/λ
+8(d) U_i vs f_i (δ=5000)     — concave with interior optimum
+
+Settings per §7.5: B=500, φ=5, λ=1, μ_i=5, Σf_{−i}=1000, γ_i=0.01.
+derived reports the curve values / located optimum.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core.incentive import (NodeParams, PublisherParams, best_response,
+                                  node_utility, optimal_delta,
+                                  publisher_utility, stackelberg_equilibrium)
+
+P = PublisherParams(B=500.0, lam=1.0, phi=5.0)
+GAMMA, MU, F_REST = 0.01, 5.0, 1000.0
+
+
+def fig8a() -> None:
+    deltas = jnp.asarray(5000.0)
+    for F in (500.0, 1000.0, 2000.0):
+        u = float(publisher_utility(deltas, jnp.asarray(F), P))
+        emit(f"incentive/utp_vs_F/F{int(F)}", 0.0, f"U_tp={u:.1f}")
+
+
+def fig8b() -> None:
+    f_i = jnp.asarray(40.0)
+    for d in (1000.0, 3000.0, 5000.0):
+        u = float(node_utility(f_i, jnp.asarray(F_REST), jnp.asarray(d),
+                               jnp.asarray(GAMMA), jnp.asarray(MU)))
+        emit(f"incentive/ui_vs_delta/d{int(d)}", 0.0, f"U_i={u:.2f}")
+
+
+def fig8c() -> None:
+    F = jnp.asarray(1000.0)
+    d_star = float(optimal_delta(F, P))
+    u_star = float(publisher_utility(jnp.asarray(d_star), F, P))
+    emit("incentive/utp_optimum", 0.0, f"delta*={d_star:.0f};U_tp={u_star:.1f}")
+    for d in (0.5 * d_star, 1.5 * d_star):
+        u = float(publisher_utility(jnp.asarray(d), F, P))
+        assert u < u_star
+        emit(f"incentive/utp_vs_delta/d{int(d)}", 0.0, f"U_tp={u:.1f}")
+
+
+def fig8d() -> None:
+    def solve():
+        return float(best_response(jnp.asarray(F_REST), jnp.asarray(5000.0),
+                                   jnp.asarray(GAMMA), jnp.asarray(MU)))
+
+    us = time_call(solve, repeats=3)
+    f_star = solve()
+    u_star = float(node_utility(jnp.asarray(f_star), jnp.asarray(F_REST),
+                                jnp.asarray(5000.0), jnp.asarray(GAMMA),
+                                jnp.asarray(MU)))
+    emit("incentive/ui_optimum", us, f"f*={f_star:.1f};U_i={u_star:.2f}")
+
+
+def bench_full_equilibrium() -> None:
+    nodes = NodeParams(jnp.full((50,), GAMMA), jnp.full((50,), MU))
+
+    def solve():
+        import jax
+        jax.block_until_ready(stackelberg_equilibrium(nodes))
+
+    us = time_call(solve, repeats=3)
+    sol = stackelberg_equilibrium(nodes)
+    emit("incentive/equilibrium_N50", us,
+         f"delta*={float(sol.delta_star):.0f};F*={float(sol.F_star):.0f}")
+
+
+def main() -> None:
+    fig8a()
+    fig8b()
+    fig8c()
+    fig8d()
+    bench_full_equilibrium()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Paper Fig. 6: ME computation cost and leader-selection randomness.
+
+Fig. 6(a): ME time vs network size N × model complexity (MLP hidden width).
+Fig. 6(b): leader-selection counts under IID vs non-IID client data
+           (randomness/fairness of ME) — run on the full BHFL runtime.
+
+Also benchmarks the Pallas fused-similarity kernel against the 3-pass
+reference (the kernel's HBM-traffic claim, DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core.model_eval import model_evaluation
+from repro.kernels import batched_cosine_similarity
+from repro.kernels.ref import cosine_similarity_ref
+from repro.models.mlp import MLPConfig
+
+NET_SIZES = [10, 25, 50]
+HIDDEN = [64, 128, 256]
+
+
+def _stacked_models(n: int, hidden: int, seed: int = 0) -> jnp.ndarray:
+    cfg = MLPConfig(hidden=hidden)
+    d = cfg.in_dim * cfg.hidden + cfg.hidden + cfg.hidden * cfg.n_classes + cfg.n_classes
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+
+
+def bench_me_cost() -> None:
+    """Fig. 6(a)."""
+    for hidden in HIDDEN:
+        for n in NET_SIZES:
+            W = _stacked_models(n, hidden)
+            sizes = jnp.ones((n,), jnp.float32)
+
+            def me():
+                jax.block_until_ready(model_evaluation(W, sizes))
+
+            us = time_call(me, repeats=5)
+            emit(f"me_cost/h{hidden}/N{n}", us, f"D={W.shape[1]}")
+
+
+def bench_kernel_vs_ref() -> None:
+    """Fused Pallas kernel vs 3-pass reference. Interpret mode executes the
+    kernel body per grid step in Python, so CPU wall time is advisory only —
+    the structural claim is 1 vs 3 HBM passes (small size keeps the
+    interpret-mode sweep fast)."""
+    W = _stacked_models(8, 64)
+    gw = W.mean(0)
+
+    def kern():
+        jax.block_until_ready(batched_cosine_similarity(W, gw))
+
+    def ref():
+        jax.block_until_ready(cosine_similarity_ref(W, gw))
+
+    us_k = time_call(kern, repeats=5)
+    us_r = time_call(ref, repeats=5)
+    emit("me_kernel_fused", us_k, "hbm_passes=1")
+    emit("me_ref_3pass", us_r, "hbm_passes=3")
+
+
+def bench_leader_randomness(rounds: int = 12) -> None:
+    """Fig. 6(b): leader histogram, IID vs non-IID (label-limited)."""
+    from repro.data.synthetic import make_mnist_like
+    from repro.fl.hierarchy import build_hierarchy
+    from repro.fl.hfl_runtime import BHFLConfig, BHFLRuntime
+
+    train, test = make_mnist_like(n_train=1200, n_test=200)
+    for dist in ("iid", "label"):
+        cfg = BHFLConfig(n_nodes=5, clients_per_node=3, fel_iterations=1)
+        clusters = build_hierarchy(train, 5, 3, dist, seed=1)
+        rt = BHFLRuntime(clusters, cfg, None)
+
+        import time as _t
+        t0 = _t.perf_counter()
+        rt.run(rounds)
+        us = (_t.perf_counter() - t0) * 1e6 / rounds
+        counts = rt.leader_counts()
+        # fairness: normalized entropy of the leader histogram (1 = uniform)
+        p = np.asarray(list(counts.values()), np.float64)
+        p = p / p.sum()
+        ent = float(-(p[p > 0] * np.log(p[p > 0])).sum() / np.log(len(p)))
+        emit(f"me_randomness/{dist}", us,
+             f"entropy={ent:.3f};counts={list(counts.values())}")
+
+
+def main() -> None:
+    bench_me_cost()
+    bench_kernel_vs_ref()
+    bench_leader_randomness()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Roofline rows from the dry-run sweep (reads dryrun_results.json written
+by ``python -m repro.launch.dryrun --all --both-meshes --json ...``).
+
+Emitted as ``name,us_per_call,derived`` where us_per_call is the dominant
+roofline term (the step's lower-bound time on the target hardware) and
+derived carries the three terms + bottleneck.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.environ.get("DRYRUN_JSON",
+                         os.path.join(os.path.dirname(__file__), "..",
+                                      "dryrun_results.json"))
+
+
+def main() -> None:
+    if not os.path.exists(RESULTS):
+        print(f"roofline,SKIPPED,no {RESULTS} — run repro.launch.dryrun first")
+        return
+    rows = json.loads(open(RESULTS).read())
+    seen = set()
+    for r in rows:
+        key = (r["arch"], r["shape"], r["mesh"])
+        if key in seen:
+            continue
+        seen.add(key)
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+             bound * 1e6,
+             f"dom={r['dominant']};compute={r['compute_s']*1e3:.2f}ms;"
+             f"memory={r['memory_s']*1e3:.2f}ms;"
+             f"collective={r['collective_s']*1e3:.2f}ms;"
+             f"useful={r['useful_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

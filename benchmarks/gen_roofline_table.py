@@ -1,0 +1,46 @@
+"""Render the EXPERIMENTS.md §Roofline markdown table from
+dryrun_results.json.
+
+Usage: PYTHONPATH=src python -m benchmarks.gen_roofline_table [json] [--mesh 16x16]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.2f}ms"
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    mesh_filter = None
+    if "--mesh" in sys.argv:
+        mesh_filter = sys.argv[sys.argv.index("--mesh") + 1]
+    rows = json.loads(open(path).read())
+    seen = {}
+    for r in rows:
+        seen[(r["arch"], r["shape"], r["mesh"])] = r
+    print("| arch | shape | mesh | compute | memory | collective | bound |"
+          " useful | dominant-fix hint |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    hints = {
+        "collective": "re-shard to cut sharded-contraction all-reduces",
+        "memory": "fuse passes / shrink caches / window reads",
+        "compute": "skip masked blocks; MXU-align tiles",
+    }
+    for (arch, shape, mesh), r in sorted(seen.items()):
+        if mesh_filter and mesh != mesh_filter:
+            continue
+        print(f"| {arch} | {shape} | {mesh} | {fmt_s(r['compute_s'])} "
+              f"| {fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} "
+              f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+              f"| {hints[r['dominant']]} |")
+
+
+if __name__ == "__main__":
+    main()

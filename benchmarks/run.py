@@ -1,0 +1,40 @@
+"""Benchmark runner: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+
+  Fig. 4-5 → bench_hcds            (HCDS commit/reveal cost)
+  Fig. 6   → bench_model_eval      (ME cost + leader randomness)
+  Fig. 7   → bench_btsv            (BTSV attack resistance)
+  Fig. 8   → bench_incentive       (Stackelberg utilities)
+  §1 claim → bench_consensus_overhead (energy-recycling quantified)
+
+Roofline rows come from the dry-run (python -m repro.launch.dryrun) since
+they need the 512-device XLA flag, which must not leak into this process.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_btsv, bench_consensus_overhead, bench_hcds,
+                            bench_incentive, bench_model_eval, bench_roofline)
+    print("name,us_per_call,derived")
+    mods = [("hcds", bench_hcds), ("model_eval", bench_model_eval),
+            ("btsv", bench_btsv), ("incentive", bench_incentive),
+            ("consensus_overhead", bench_consensus_overhead),
+            ("roofline", bench_roofline)]
+    failures = []
+    for name, mod in mods:
+        try:
+            mod.main()
+        except Exception as e:  # keep the harness going; report at the end
+            failures.append((name, repr(e)))
+            print(f"{name},ERROR,{e!r}", file=sys.stderr)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

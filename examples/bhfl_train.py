@@ -1,0 +1,54 @@
+"""End-to-end driver (paper §7.1 setup, scaled to this container):
+
+Blockchain-based hierarchical FL on MNIST-like data — N edge clusters × 5
+clients each train an MLP with FedAvg; every BCFL round runs the full
+PoFEL consensus (HCDS + ME + BTSV) and appends a block. Trains for a few
+hundred federated client-steps and reports global-model accuracy, leader
+rotation, and chain integrity.
+
+Run:  PYTHONPATH=src python examples/bhfl_train.py [--nodes 8] [--rounds 10]
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.data.synthetic import make_mnist_like
+from repro.fl.hierarchy import build_hierarchy
+from repro.fl.hfl_runtime import BHFLConfig, BHFLRuntime
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=8)
+    ap.add_argument("--clients", type=int, default=5)
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--fel-iters", type=int, default=3)
+    ap.add_argument("--distribution", default="iid",
+                    choices=["iid", "label", "dirichlet"])
+    args = ap.parse_args()
+
+    train, test = make_mnist_like(n_train=6000, n_test=1000)
+    cfg = BHFLConfig(n_nodes=args.nodes, clients_per_node=args.clients,
+                     fel_iterations=args.fel_iters)
+    clusters = build_hierarchy(train, args.nodes, args.clients,
+                               args.distribution)
+    rt = BHFLRuntime(clusters, cfg, test)
+
+    print(f"BHFL: {args.nodes} BCFL nodes × {args.clients} clients, "
+          f"{args.distribution} data, {args.fel_iters} FEL iters/round")
+    for _ in range(args.rounds):
+        m = rt.run_round()
+        print(f"round {m.round:3d}  leader={m.leader_id}  "
+              f"acc={m.test_accuracy:.3f}  loss={m.test_loss:.3f}")
+
+    counts = rt.leader_counts()
+    print("\nleader counts (Fig. 6b):", counts)
+    assert rt.consensus.ledgers[0].verify_chain()
+    print(f"chain verified at height {rt.consensus.ledgers[0].height} ✓")
+    first, last = rt.history[0], rt.history[-1]
+    print(f"accuracy {first.test_accuracy:.3f} → {last.test_accuracy:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.blockchain.block import Block, block_hash
+from repro.blockchain.ledger import Ledger
+from repro.blockchain.smart_contract import VoteTallyContract
+
+__all__ = ["Block", "block_hash", "Ledger", "VoteTallyContract"]

@@ -1,0 +1,57 @@
+"""Block structure for the consortium BCFL chain (paper §3.1 step 4).
+
+A block at BCFL round k stores: the leader identity e*(k), the digests of
+all submitted FEL models W(k) (full weights live in the off-chain model
+store, as any realistic chain would do — the chain stores commitments),
+the updated global model digest, the consensus artifacts (votes, BTS
+scores, vote weights), and the previous block hash.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field, asdict
+from typing import Any, Dict, Optional
+
+from repro.core import crypto
+
+
+@dataclass(frozen=True)
+class Block:
+    index: int
+    round: int
+    leader_id: int
+    prev_hash: str
+    model_digests: Dict[int, str]        # node_id -> hex digest of w^i(k)
+    global_model_digest: str             # hex digest of gw(k)
+    votes: Dict[int, int]                # voter -> votee
+    vote_weights: Dict[int, float]       # voter -> WV^i(k)
+    advotes: Dict[int, float]            # votee -> adjusted tally
+    task_id: str = "task-0"
+    extra: Dict[str, Any] = field(default_factory=dict)
+    leader_signature: Optional[tuple] = None
+
+    def body_bytes(self) -> bytes:
+        d = asdict(self)
+        d.pop("leader_signature")
+        return json.dumps(d, sort_keys=True, default=str).encode()
+
+    def signed(self, keypair: crypto.ECDSAKeyPair) -> "Block":
+        tag = crypto.dsign(crypto.sha256_digest(self.body_bytes()),
+                           keypair.private_key)
+        return Block(**{**asdict(self), "leader_signature": tag})
+
+    def verify_signature(self, leader_pk: crypto.Point) -> bool:
+        if self.leader_signature is None:
+            return False
+        return crypto.dverify(tuple(self.leader_signature), leader_pk,
+                              crypto.sha256_digest(self.body_bytes()))
+
+
+def block_hash(block: Block) -> str:
+    return crypto.sha256_digest(
+        block.body_bytes(),
+        json.dumps(block.leader_signature).encode()).hex()
+
+
+GENESIS_HASH = "0" * 64

@@ -1,0 +1,75 @@
+"""Append-only ledger each BCFL node maintains (paper §3.1 step 4).
+
+Verification on append: chain linkage, leader signature, and that the
+claimed leader matches an independent BTSV re-tally (nodes re-run the
+smart contract locally — the consortium-chain analogue of validating a
+block's proof).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Callable, List, Optional
+
+from repro.blockchain.block import GENESIS_HASH, Block, block_hash
+from repro.core import crypto
+
+
+class InvalidBlock(ValueError):
+    pass
+
+
+class Ledger:
+    def __init__(self, node_id: int = -1):
+        self.node_id = node_id
+        self.blocks: List[Block] = []
+
+    @property
+    def head_hash(self) -> str:
+        return block_hash(self.blocks[-1]) if self.blocks else GENESIS_HASH
+
+    @property
+    def height(self) -> int:
+        return len(self.blocks)
+
+    def append(self, block: Block, leader_pk: Optional[crypto.Point] = None,
+               retally: Optional[Callable[[Block], int]] = None) -> None:
+        if block.prev_hash != self.head_hash:
+            raise InvalidBlock(
+                f"chain break at height {self.height}: prev_hash mismatch")
+        if block.index != self.height:
+            raise InvalidBlock(f"bad index {block.index} at height {self.height}")
+        if leader_pk is not None and not block.verify_signature(leader_pk):
+            raise InvalidBlock("leader signature invalid")
+        if retally is not None and retally(block) != block.leader_id:
+            raise InvalidBlock("leader does not match local BTSV re-tally")
+        self.blocks.append(block)
+
+    def verify_chain(self) -> bool:
+        prev = GENESIS_HASH
+        for i, b in enumerate(self.blocks):
+            if b.prev_hash != prev or b.index != i:
+                return False
+            prev = block_hash(b)
+        return True
+
+    # -- persistence --------------------------------------------------------
+    def save(self, path: str | Path) -> None:
+        from dataclasses import asdict
+        Path(path).write_text(json.dumps([asdict(b) for b in self.blocks]))
+
+    @classmethod
+    def load(cls, path: str | Path, node_id: int = -1) -> "Ledger":
+        led = cls(node_id)
+        for d in json.loads(Path(path).read_text()):
+            d["model_digests"] = {int(k): v for k, v in d["model_digests"].items()}
+            d["votes"] = {int(k): int(v) for k, v in d["votes"].items()}
+            d["vote_weights"] = {int(k): float(v) for k, v in d["vote_weights"].items()}
+            d["advotes"] = {int(k): float(v) for k, v in d["advotes"].items()}
+            if d.get("leader_signature") is not None:
+                d["leader_signature"] = tuple(d["leader_signature"])
+            led.blocks.append(Block(**d))
+        if not led.verify_chain():
+            raise InvalidBlock(f"loaded chain from {path} fails verification")
+        return led

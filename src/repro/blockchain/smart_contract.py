@@ -1,0 +1,79 @@
+"""The vote-tally smart contract (paper §4.3): BTSV wrapped in contract
+semantics — nodes submit (vote, prediction) transactions for a round, and
+once all expected submissions arrive the tally executes deterministically.
+
+Every BCFL node runs an identical copy; determinism of the JAX tally makes
+the contract's output consensus-safe.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.btsv import BTSVConfig, BTSVResult, btsv_round, init_history
+
+
+@dataclass(frozen=True)
+class VoteSubmission:
+    node_id: int
+    round: int
+    vote: int                 # e_best^i(k)
+    predictions: np.ndarray   # P^i(k), shape (N,), sums to 1
+
+
+class ContractError(ValueError):
+    pass
+
+
+class VoteTallyContract:
+    """State machine: collect N submissions per round, then tally."""
+
+    def __init__(self, n_nodes: int, cfg: BTSVConfig = BTSVConfig()):
+        self.n_nodes = n_nodes
+        self.cfg = cfg
+        self._pending: Dict[int, Dict[int, VoteSubmission]] = {}
+        self._history = init_history(n_nodes, cfg)
+        self._results: Dict[int, BTSVResult] = {}
+
+    def submit(self, s: VoteSubmission) -> None:
+        if not (0 <= s.node_id < self.n_nodes):
+            raise ContractError(f"unknown node {s.node_id}")
+        if not (0 <= s.vote < self.n_nodes):
+            raise ContractError(f"vote out of range: {s.vote}")
+        preds = np.asarray(s.predictions, np.float32)
+        if preds.shape != (self.n_nodes,):
+            raise ContractError(f"prediction shape {preds.shape} != ({self.n_nodes},)")
+        if not np.isclose(preds.sum(), 1.0, atol=1e-3):
+            raise ContractError("predictions must sum to 1")
+        if np.any(preds < 0):
+            raise ContractError("negative prediction probability")
+        per_round = self._pending.setdefault(s.round, {})
+        if s.node_id in per_round:
+            raise ContractError(f"duplicate submission from node {s.node_id}")
+        per_round[s.node_id] = s
+
+    def ready(self, round: int) -> bool:
+        return len(self._pending.get(round, {})) == self.n_nodes
+
+    def tally(self, round: int) -> BTSVResult:
+        """Execute Alg. 4 once all submissions for ``round`` are in."""
+        if round in self._results:
+            return self._results[round]
+        if not self.ready(round):
+            got = len(self._pending.get(round, {}))
+            raise ContractError(f"round {round}: {got}/{self.n_nodes} submissions")
+        subs = self._pending[round]
+        votes = jnp.asarray([subs[i].vote for i in range(self.n_nodes)], jnp.int32)
+        P = jnp.stack([jnp.asarray(subs[i].predictions, jnp.float32)
+                       for i in range(self.n_nodes)])
+        result, self._history = btsv_round(votes, P, self._history, self.cfg)
+        self._results[round] = result
+        del self._pending[round]
+        return result
+
+    def result(self, round: int) -> Optional[BTSVResult]:
+        return self._results.get(round)

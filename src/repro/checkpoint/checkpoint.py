@@ -1,0 +1,86 @@
+"""Pytree checkpointing: npz payload + JSON manifest with treedef,
+shapes, dtypes and an integrity digest. Sharding-agnostic (arrays are
+gathered to host before save; the dry-run never materializes arrays so
+this only runs for CPU-scale models).
+
+Non-native dtypes (bfloat16 from ml_dtypes) are stored as bit-equal
+uint16 views with the true dtype recorded in the manifest — np.savez
+cannot round-trip them directly.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core.crypto import sha256_digest
+from repro.core.serialization import serialize_pytree
+
+_STEP_RE = re.compile(r"step_(\d+)\.npz$")
+_NATIVE_KINDS = set("biufc")
+
+
+def _to_savable(arr: np.ndarray) -> tuple[np.ndarray, Optional[str]]:
+    if arr.dtype.kind in _NATIVE_KINDS and arr.dtype.str != "<V2":
+        return arr, None
+    # bit-cast exotic dtypes (bfloat16 etc.) to a same-width uint view
+    width = arr.dtype.itemsize
+    uint = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}[width]
+    return arr.view(uint), arr.dtype.name
+
+
+def save_checkpoint(directory: str | Path, step: int, tree: Any,
+                    metadata: Optional[dict] = None) -> Path:
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays, true_dtypes = {}, {}
+    for i, (_, leaf) in enumerate(paths):
+        arr, true_dtype = _to_savable(np.asarray(leaf))
+        arrays[f"leaf_{i}"] = arr
+        if true_dtype is not None:
+            true_dtypes[str(i)] = true_dtype
+    payload = directory / f"step_{step}.npz"
+    np.savez(payload, **arrays)
+    manifest = {
+        "step": step,
+        "keypaths": [jax.tree_util.keystr(p) for p, _ in paths],
+        "true_dtypes": true_dtypes,
+        "digest": sha256_digest(serialize_pytree(tree)).hex(),
+        "metadata": metadata or {},
+    }
+    (directory / f"step_{step}.json").write_text(json.dumps(manifest))
+    return payload
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    steps = [int(m.group(1)) for f in Path(directory).glob("step_*.npz")
+             if (m := _STEP_RE.search(f.name))]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str | Path, step: int, template: Any,
+                    verify: bool = True) -> Any:
+    directory = Path(directory)
+    manifest = json.loads((directory / f"step_{step}.json").read_text())
+    true_dtypes = manifest.get("true_dtypes", {})
+    with np.load(directory / f"step_{step}.npz") as data:
+        arrays = []
+        for i in range(len(data.files)):
+            arr = data[f"leaf_{i}"]
+            if str(i) in true_dtypes:
+                import ml_dtypes  # noqa: F401 — registers bfloat16 et al.
+                arr = arr.view(np.dtype(true_dtypes[str(i)]))
+            arrays.append(arr)
+    treedef = jax.tree_util.tree_structure(template)
+    tree = jax.tree_util.tree_unflatten(treedef, arrays)
+    if verify:
+        digest = sha256_digest(serialize_pytree(tree)).hex()
+        if digest != manifest["digest"]:
+            raise ValueError(f"checkpoint step {step} integrity check failed")
+    return tree

@@ -1,0 +1,38 @@
+"""Architecture + input-shape registry.
+
+Every assigned architecture is selectable via ``--arch <id>``; each config
+module cites its source paper/model card.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ArchConfig
+from repro.configs.shapes import INPUT_SHAPES, InputShape
+
+ARCH_IDS = [
+    "phi3.5-moe-42b-a6.6b",
+    "llama-3.2-vision-90b",
+    "musicgen-medium",
+    "rwkv6-1.6b",
+    "deepseek-moe-16b",
+    "starcoder2-3b",
+    "qwen2.5-14b",
+    "yi-6b",
+    "mistral-nemo-12b",
+    "zamba2-7b",
+    "mnist-mlp",        # the paper's own model
+]
+
+_MODULE_OF = {a: a.replace(".", "_").replace("-", "_") for a in ARCH_IDS}
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in _MODULE_OF:
+        raise KeyError(f"unknown arch {arch_id!r}; available: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULE_OF[arch_id]}")
+    return mod.CONFIG
+
+
+__all__ = ["ARCH_IDS", "INPUT_SHAPES", "InputShape", "get_config"]

@@ -1,0 +1,40 @@
+"""PoFEL core: the paper's primary contribution as composable JAX modules.
+
+- crypto / serialization / hcds — Hash-based Commitment + Digital Signature
+- model_eval — ME: weighted aggregation + cosine-similarity voting
+- btsv — Bayesian Truth Serum-based weighted vote tallying
+- incentive — two-stage Stackelberg game solver
+- consensus — the PoFEL round orchestrator (Alg. 1)
+
+Submodule symbols are re-exported lazily (PEP 562) because the blockchain
+package depends on ``repro.core.crypto`` while ``repro.core.consensus``
+depends back on the blockchain package.
+"""
+
+_EXPORTS = {
+    "BTSVConfig": "repro.core.btsv", "BTSVResult": "repro.core.btsv",
+    "btsv_round": "repro.core.btsv", "init_history": "repro.core.btsv",
+    "ConsensusRecord": "repro.core.consensus",
+    "PoFELConsensus": "repro.core.consensus",
+    "Commitment": "repro.core.hcds", "HCDSNode": "repro.core.hcds",
+    "HCDSResult": "repro.core.hcds", "Reveal": "repro.core.hcds",
+    "run_hcds_round": "repro.core.hcds",
+    "NodeParams": "repro.core.incentive", "PublisherParams": "repro.core.incentive",
+    "StackelbergSolution": "repro.core.incentive",
+    "stackelberg_equilibrium": "repro.core.incentive",
+    "MEResult": "repro.core.model_eval", "aggregate_global": "repro.core.model_eval",
+    "cosine_similarities": "repro.core.model_eval",
+    "flatten_model": "repro.core.model_eval",
+    "model_evaluation": "repro.core.model_eval",
+    "model_evaluation_pytrees": "repro.core.model_eval",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+        mod = importlib.import_module(_EXPORTS[name])
+        return getattr(mod, name)
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")

@@ -1,0 +1,130 @@
+"""PoFEL — Proof of Federated Edge Learning consensus (paper §4, Alg. 1).
+
+One consensus round among N BCFL nodes, given their FEL models W(k):
+
+  1. HCDS(w^i(k)) at every e_i            — commit/reveal model exchange
+  2. (e_best^i, P^i, gw) = ME(W(k))        — aggregate + similarity + vote
+  3. submit votes to the vote-tally smart contract
+  4. e*(k) = BTSV(E_best(k), P(k))         — weighted tally, leader election
+  5. leader mints + signs the new block; every node verifies and appends
+
+``PoFELConsensus`` is the host-side orchestrator used by the paper-faithful
+FL runtime and the benchmarks. The in-graph sharded variant used by the
+large-model training path lives in ``repro.fl.sharded_consensus``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.blockchain.block import Block, block_hash
+from repro.blockchain.ledger import Ledger
+from repro.blockchain.smart_contract import VoteSubmission, VoteTallyContract
+from repro.core import crypto
+from repro.core.btsv import BTSVConfig, BTSVResult
+from repro.core.hcds import HCDSNode, run_hcds_round
+from repro.core.model_eval import model_evaluation_pytrees
+from repro.core.serialization import serialize_pytree
+
+
+@dataclass
+class ConsensusRecord:
+    round: int
+    leader_id: int
+    similarities: np.ndarray
+    votes: np.ndarray
+    btsv: BTSVResult
+    block: Block
+    global_model: Any            # gw(k) as a flat array
+    rejected: Dict[int, str]     # node_id -> rejection reason (HCDS failures)
+
+
+class PoFELConsensus:
+    """Full-system consensus driver over N co-simulated BCFL nodes."""
+
+    def __init__(self, n_nodes: int, btsv_cfg: BTSVConfig = BTSVConfig(),
+                 g_max: float = 0.99, nonce_len: int = 32):
+        self.n_nodes = n_nodes
+        self.g_max = g_max
+        self.hcds_nodes = [HCDSNode(i, nonce_len=nonce_len) for i in range(n_nodes)]
+        self.public_keys = {n.node_id: n.keypair.public_key for n in self.hcds_nodes}
+        self.contract = VoteTallyContract(n_nodes, btsv_cfg)
+        self.ledgers = [Ledger(i) for i in range(n_nodes)]
+        self.round = 0
+
+    # -- vote manipulation hook (adversary injection for experiments) -------
+    VoteHook = Callable[[int, int, np.ndarray], tuple[int, np.ndarray]]
+
+    def run_round(self, models: Sequence[Any], data_sizes: Sequence[float],
+                  vote_hook: Optional["PoFELConsensus.VoteHook"] = None,
+                  ) -> ConsensusRecord:
+        """Alg. 1 for one round k; ``models`` is the list of FEL pytrees."""
+        k = self.round
+        n = self.n_nodes
+
+        # Line 2: HCDS at every node
+        reveal_results = run_hcds_round(self.hcds_nodes, models, k, self.public_keys)
+        rejected: Dict[int, str] = {}
+        for recv, senders in reveal_results.items():
+            for sender, res in senders.items():
+                if not res.accepted and sender not in rejected:
+                    rejected[sender] = res.reason
+
+        # Line 3: ME at every node — all honest nodes compute identical
+        # (gw, sims); we compute once and derive per-node votes.
+        me = model_evaluation_pytrees(list(models), list(data_sizes), g_max=self.g_max)
+        sims = np.asarray(me.similarities)
+        honest_vote = int(np.argmax(sims))
+
+        # Line 4: submissions (vote_hook lets experiments model malicious votes)
+        votes = np.empty(n, np.int64)
+        for i in range(n):
+            vote_i = honest_vote
+            preds_i = np.full((n,), (1.0 - self.g_max) / (n - 1), np.float32)
+            preds_i[vote_i] = self.g_max
+            if vote_hook is not None:
+                vote_i, preds_i = vote_hook(i, vote_i, preds_i)
+            votes[i] = vote_i
+            self.contract.submit(VoteSubmission(i, k, int(vote_i), preds_i))
+
+        # Line 5: BTSV tally in the smart contract
+        btsv = self.contract.tally(k)
+        leader = int(btsv.leader)
+
+        # Lines 6-7: leader mints the block; all nodes verify + append
+        model_digests = {
+            i: crypto.sha256_digest(serialize_pytree(m)).hex()
+            for i, m in enumerate(models)
+        }
+        gw_digest = crypto.sha256_digest(
+            np.asarray(me.global_model, np.float32).tobytes()).hex()
+        block = Block(
+            index=self.ledgers[leader].height,
+            round=k,
+            leader_id=leader,
+            prev_hash=self.ledgers[leader].head_hash,
+            model_digests=model_digests,
+            global_model_digest=gw_digest,
+            votes={i: int(votes[i]) for i in range(n)},
+            vote_weights={i: float(btsv.weights[i]) for i in range(n)},
+            advotes={j: float(btsv.advotes[j]) for j in range(n)},
+            extra={"rejected": {str(i): r for i, r in rejected.items()}},
+        ).signed(self.hcds_nodes[leader].keypair)
+
+        def retally(b: Block) -> int:
+            res = self.contract.result(b.round)
+            return int(res.leader) if res is not None else -1
+
+        for ledger in self.ledgers:
+            ledger.append(block, leader_pk=self.public_keys[leader], retally=retally)
+
+        self.round += 1
+        return ConsensusRecord(k, leader, sims, votes, btsv, block,
+                               np.asarray(me.global_model), rejected)
+
+    @property
+    def chain(self) -> List[Block]:
+        return self.ledgers[0].blocks

@@ -1,0 +1,177 @@
+"""Cryptographic primitives for the HCDS scheme (paper §4.1).
+
+The paper uses SHA-256 as the hash function ``H`` and ECDSA (secp256k1) as
+the digital-signature algorithm (``DSign`` / ``DVerify``).  This module is a
+dependency-free implementation of both:
+
+* ``sha256_digest`` — H(r || w) over a nonce and a serialized model.
+* ``ECDSAKeyPair`` / ``dsign`` / ``dverify`` — deterministic-nonce (RFC-6979
+  style, HMAC-DRBG) ECDSA over secp256k1.
+
+These run in the *host control plane* of the framework: the TPU graph never
+hashes or signs (there is no MXU/VPU analogue of carry-chain crypto; see
+DESIGN.md §5), matching how a real deployment would pin the blockchain
+control plane to the edge-server CPUs.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import hmac
+import os
+from dataclasses import dataclass
+from typing import Tuple
+
+# ---------------------------------------------------------------------------
+# secp256k1 curve parameters (SEC 2, v2.0)
+# ---------------------------------------------------------------------------
+_P = 0xFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFEFFFFFC2F
+_N = 0xFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFEBAAEDCE6AF48A03BBFD25E8CD0364141
+_GX = 0x79BE667EF9DCBBAC55A06295CE870B07029BFCDB2DCE28D959F2815B16F81798
+_GY = 0x483ADA7726A3C4655DA4FBFC0E1108A8FD17B448A68554199C47D08FFB10D4B8
+_A = 0
+
+Point = Tuple[int, int]
+_INF: Point = (0, 0)  # point at infinity sentinel (0,0 is not on the curve)
+
+
+def _inv_mod(a: int, m: int) -> int:
+    return pow(a, -1, m)
+
+
+def _is_inf(p: Point) -> bool:
+    return p[0] == 0 and p[1] == 0
+
+
+def _point_add(p: Point, q: Point) -> Point:
+    if _is_inf(p):
+        return q
+    if _is_inf(q):
+        return p
+    if p[0] == q[0] and (p[1] + q[1]) % _P == 0:
+        return _INF
+    if p == q:
+        lam = (3 * p[0] * p[0] + _A) * _inv_mod(2 * p[1], _P) % _P
+    else:
+        lam = (q[1] - p[1]) * _inv_mod(q[0] - p[0], _P) % _P
+    x = (lam * lam - p[0] - q[0]) % _P
+    y = (lam * (p[0] - x) - p[1]) % _P
+    return (x, y)
+
+
+def _point_mul(k: int, p: Point) -> Point:
+    """Double-and-add scalar multiplication (constant-time not required in
+    this research framework; keys only sign benchmark/e2e traffic)."""
+    acc = _INF
+    addend = p
+    while k:
+        if k & 1:
+            acc = _point_add(acc, addend)
+        addend = _point_add(addend, addend)
+        k >>= 1
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Hashing / commitment
+# ---------------------------------------------------------------------------
+
+def sha256_digest(*parts: bytes) -> bytes:
+    """H(part0 || part1 || ...) — the commitment digest of Alg. 2 line 2."""
+    h = hashlib.sha256()
+    for part in parts:
+        h.update(part)
+    return h.digest()
+
+
+def random_nonce(length: int = 32) -> bytes:
+    """Fixed-length random nonce r^i(k) (Alg. 2 line 1)."""
+    return os.urandom(length)
+
+
+# ---------------------------------------------------------------------------
+# ECDSA
+# ---------------------------------------------------------------------------
+
+def _bits2int(b: bytes) -> int:
+    i = int.from_bytes(b, "big")
+    blen = len(b) * 8
+    nlen = _N.bit_length()
+    if blen > nlen:
+        i >>= blen - nlen
+    return i
+
+
+def _rfc6979_k(msg_hash: bytes, priv: int) -> int:
+    """Deterministic nonce per RFC 6979 (HMAC-SHA256 DRBG)."""
+    holen = 32
+    x = priv.to_bytes(32, "big")
+    h1 = msg_hash
+    v = b"\x01" * holen
+    k = b"\x00" * holen
+    k = hmac.new(k, v + b"\x00" + x + h1, hashlib.sha256).digest()
+    v = hmac.new(k, v, hashlib.sha256).digest()
+    k = hmac.new(k, v + b"\x01" + x + h1, hashlib.sha256).digest()
+    v = hmac.new(k, v, hashlib.sha256).digest()
+    while True:
+        v = hmac.new(k, v, hashlib.sha256).digest()
+        cand = _bits2int(v)
+        if 1 <= cand < _N:
+            return cand
+        k = hmac.new(k, v + b"\x00", hashlib.sha256).digest()
+        v = hmac.new(k, v, hashlib.sha256).digest()
+
+
+@dataclass(frozen=True)
+class ECDSAKeyPair:
+    """A BCFL node's signing identity (SK_i, PK_i)."""
+
+    private_key: int
+    public_key: Point
+
+    @staticmethod
+    def generate(seed: bytes | None = None) -> "ECDSAKeyPair":
+        if seed is None:
+            seed = os.urandom(32)
+        priv = (int.from_bytes(hashlib.sha256(seed).digest(), "big") % (_N - 1)) + 1
+        pub = _point_mul(priv, (_GX, _GY))
+        return ECDSAKeyPair(priv, pub)
+
+
+Signature = Tuple[int, int]
+
+
+def dsign(digest: bytes, private_key: int) -> Signature:
+    """DSign(d, SK) → tag (Alg. 2 line 3)."""
+    z = _bits2int(digest)
+    while True:
+        k = _rfc6979_k(digest, private_key)
+        x, _ = _point_mul(k, (_GX, _GY))
+        r = x % _N
+        if r == 0:
+            digest = sha256_digest(digest)  # extremely unlikely; re-derive
+            continue
+        s = _inv_mod(k, _N) * (z + r * private_key) % _N
+        if s == 0:
+            digest = sha256_digest(digest)
+            continue
+        if s > _N // 2:  # low-s normalization
+            s = _N - s
+        return (r, s)
+
+
+def dverify(tag: Signature, public_key: Point, digest: bytes) -> bool:
+    """DVerify(tag, PK, d) → Accepted? (Alg. 2 lines 7, 15)."""
+    r, s = tag
+    if not (1 <= r < _N and 1 <= s < _N):
+        return False
+    if _is_inf(public_key):
+        return False
+    z = _bits2int(digest)
+    w = _inv_mod(s, _N)
+    u1 = z * w % _N
+    u2 = r * w % _N
+    pt = _point_add(_point_mul(u1, (_GX, _GY)), _point_mul(u2, public_key))
+    if _is_inf(pt):
+        return False
+    return pt[0] % _N == r

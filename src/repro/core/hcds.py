@@ -1,0 +1,154 @@
+"""HCDS — Hash-based Commitment and Digital Signature (paper §4.1, Alg. 2).
+
+Two-phase protocol run by every BCFL node e_i at round k:
+
+Commit stage
+    1. draw fixed-length nonce r^i(k)
+    2. d^i(k)   = H(r^i(k) || w^i(k))
+    3. tag^i(k) = DSign(d^i(k), SK_i)
+    4. broadcast (d, tag); verify every received (d^l, tag^l) with PK_l
+
+Reveal stage
+    5. broadcast (r^i(k), w^i(k), tag^i(k))
+    6. for every received reveal: recompute H(r^l || w^l), compare to the
+       committed d^l, then DVerify the tag again against the recomputed hash
+
+A model revealed without a matching prior commitment — or whose commitment
+digest matches another node's (byte-identical plagiarism) — is rejected.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+from repro.core import crypto
+from repro.core.serialization import serialize_pytree
+
+
+@dataclass(frozen=True)
+class Commitment:
+    """The commit-stage broadcast of node ``node_id``: (d^i(k), tag^i(k))."""
+
+    node_id: int
+    round: int
+    digest: bytes
+    tag: crypto.Signature
+
+
+@dataclass(frozen=True)
+class Reveal:
+    """The reveal-stage broadcast: (r^i(k), w^i(k) serialized, tag^i(k))."""
+
+    node_id: int
+    round: int
+    nonce: bytes
+    model_bytes: bytes
+    tag: crypto.Signature
+
+
+@dataclass
+class HCDSResult:
+    accepted: bool
+    reason: str = "ok"
+
+
+class HCDSNode:
+    """Per-node HCDS state machine.
+
+    The surrounding runtime (``fl.hfl_runtime`` or a benchmark) moves
+    messages between nodes; this class only implements the cryptographic
+    checks of Alg. 2, so adversarial delivery orders can be simulated by
+    the caller.
+    """
+
+    def __init__(self, node_id: int, keypair: Optional[crypto.ECDSAKeyPair] = None,
+                 nonce_len: int = 32):
+        self.node_id = node_id
+        self.keypair = keypair or crypto.ECDSAKeyPair.generate(
+            seed=node_id.to_bytes(8, "big"))
+        self.nonce_len = nonce_len
+        # received commitments / accepted reveals per round
+        self._commits: Dict[int, Dict[int, Commitment]] = {}
+        self._reveals: Dict[int, Dict[int, Reveal]] = {}
+        self._own: Dict[int, tuple[bytes, bytes]] = {}  # round -> (nonce, model_bytes)
+
+    # -- commit stage -----------------------------------------------------
+    def commit(self, model: Any, round: int) -> Commitment:
+        """Alg. 2 lines 1-4: build this node's commitment for ``round``."""
+        nonce = crypto.random_nonce(self.nonce_len)
+        model_bytes = serialize_pytree(model)
+        digest = crypto.sha256_digest(nonce, model_bytes)
+        tag = crypto.dsign(digest, self.keypair.private_key)
+        self._own[round] = (nonce, model_bytes)
+        c = Commitment(self.node_id, round, digest, tag)
+        self.receive_commit(c, self.keypair.public_key)  # record own commit
+        return c
+
+    def receive_commit(self, c: Commitment, sender_pk: crypto.Point) -> HCDSResult:
+        """Alg. 2 lines 5-10: verify tag over digest with the sender's PK."""
+        if not crypto.dverify(c.tag, sender_pk, c.digest):
+            return HCDSResult(False, "bad-signature")
+        per_round = self._commits.setdefault(c.round, {})
+        # byte-identical digest from a different node ⇒ replayed commitment
+        for other_id, other in per_round.items():
+            if other_id != c.node_id and other.digest == c.digest:
+                return HCDSResult(False, "duplicate-digest")
+        per_round[c.node_id] = c
+        return HCDSResult(True)
+
+    # -- reveal stage ------------------------------------------------------
+    def reveal(self, round: int) -> Reveal:
+        """Alg. 2 line 11: broadcast (r, w, tag)."""
+        nonce, model_bytes = self._own[round]
+        c = self._commits[round][self.node_id]
+        r = Reveal(self.node_id, round, nonce, model_bytes, c.tag)
+        self.receive_reveal(r, self.keypair.public_key)
+        return r
+
+    def receive_reveal(self, r: Reveal, sender_pk: crypto.Point) -> HCDSResult:
+        """Alg. 2 lines 12-19: binding + signature check of a reveal."""
+        per_round = self._commits.get(r.round, {})
+        c = per_round.get(r.node_id)
+        if c is None:
+            return HCDSResult(False, "no-commitment")
+        digest = crypto.sha256_digest(r.nonce, r.model_bytes)
+        if digest != c.digest:
+            return HCDSResult(False, "digest-mismatch")
+        if not crypto.dverify(r.tag, sender_pk, digest):
+            return HCDSResult(False, "bad-signature")
+        # plagiarism check: identical model bytes revealed by another node
+        for other_id, other in self._reveals.get(r.round, {}).items():
+            if other_id != r.node_id and other.model_bytes == r.model_bytes:
+                return HCDSResult(False, "plagiarized-model")
+        self._reveals.setdefault(r.round, {})[r.node_id] = r
+        return HCDSResult(True)
+
+    def accepted_models(self, round: int) -> Dict[int, bytes]:
+        """Model bytes of every node whose reveal passed all checks."""
+        return {nid: rv.model_bytes for nid, rv in self._reveals.get(round, {}).items()}
+
+
+def run_hcds_round(nodes: list[HCDSNode], models: list[Any], round: int,
+                   public_keys: Optional[dict[int, crypto.Point]] = None,
+                   ) -> dict[int, dict[int, HCDSResult]]:
+    """Drive one full commit+reveal exchange among honest ``nodes``.
+
+    Returns {receiver_id: {sender_id: result}} for the reveal stage.
+    """
+    pks = public_keys or {n.node_id: n.keypair.public_key for n in nodes}
+    commits = [n.commit(m, round) for n, m in zip(nodes, models)]
+    for c in commits:
+        for n in nodes:
+            if n.node_id != c.node_id:
+                res = n.receive_commit(c, pks[c.node_id])
+                if not res.accepted:
+                    raise RuntimeError(
+                        f"honest commit rejected: {c.node_id}->{n.node_id}: {res.reason}")
+    reveals = [n.reveal(round) for n in nodes]
+    out: dict[int, dict[int, HCDSResult]] = {n.node_id: {} for n in nodes}
+    for r in reveals:
+        for n in nodes:
+            if n.node_id != r.node_id:
+                out[n.node_id][r.node_id] = n.receive_reveal(r, pks[r.node_id])
+    return out

@@ -1,0 +1,127 @@
+"""Two-stage Stackelberg incentive mechanism (paper §5), in JAX.
+
+Stage 1 (leader = task publisher): choose total reward δ maximizing
+    U_tp(δ) = B − (λ δ / F − φ)²                         (Eq. 11)
+Stage 2 (followers = BCFL nodes): node e_i chooses CPU frequency f_i maximizing
+    U_i(f_i) = δ f_i / (f_i + Σf_{−i}) − γ_i μ_i f_i²    (Eq. 12)
+
+Closed forms (Thm 5.1 / 5.2): U_i is strictly concave, the Nash equilibrium
+solves ∂U_i/∂f_i = 0; the publisher's optimum is δ* = F* φ / λ.
+
+``best_response_iteration`` computes the Stage-2 Nash equilibrium by damped
+fixed-point iteration over simultaneous best responses, and
+``stackelberg_equilibrium`` alternates the two stages until (δ, F) converge.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PublisherParams(NamedTuple):
+    B: float = 500.0
+    lam: float = 1.0
+    phi: float = 5.0
+
+
+class NodeParams(NamedTuple):
+    gamma: jax.Array  # (N,) CPU architecture coefficients γ_i
+    mu: jax.Array     # (N,) total CPU cycles for the task μ_i
+
+
+def publisher_utility(delta: jax.Array, F: jax.Array, p: PublisherParams) -> jax.Array:
+    """Eq. 11."""
+    return p.B - (p.lam * delta / F - p.phi) ** 2
+
+
+def node_utility(f_i: jax.Array, f_rest: jax.Array, delta: jax.Array,
+                 gamma_i: jax.Array, mu_i: jax.Array) -> jax.Array:
+    """Eq. 12 — f_rest is Σ f_{−i}."""
+    return delta * f_i / (f_i + f_rest) - gamma_i * mu_i * f_i ** 2
+
+
+def optimal_delta(F_star: jax.Array, p: PublisherParams) -> jax.Array:
+    """Thm 5.2: δ* = F* φ / λ."""
+    return F_star * p.phi / p.lam
+
+
+def best_response(f_rest: jax.Array, delta: jax.Array, gamma_i: jax.Array,
+                  mu_i: jax.Array, iters: int = 60) -> jax.Array:
+    """Solve ∂U_i/∂f_i = 0 for f_i ≥ 0 by bisection (Thm 5.1).
+
+    ∂U_i/∂f_i = δ·f_rest/(f_rest+f_i)² − 2 γ_i μ_i f_i is strictly
+    decreasing in f_i (U_i concave), so a sign-change bracket + bisection
+    is exact and jit-friendly.
+    """
+    c = 2.0 * gamma_i * mu_i
+
+    def grad(f):
+        return delta * f_rest / (f_rest + f) ** 2 - c * f
+
+    # bracket: grad(0) = δ/f_rest > 0; find hi with grad(hi) < 0
+    hi0 = jnp.maximum(jnp.sqrt(delta / jnp.maximum(c, 1e-12)), 1.0)
+
+    def widen(_, hi):
+        return jnp.where(grad(hi) > 0, hi * 2.0, hi)
+
+    hi = jax.lax.fori_loop(0, 40, widen, hi0)
+    lo = jnp.zeros_like(hi)
+
+    def bisect(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        pos = grad(mid) > 0
+        return jnp.where(pos, mid, lo), jnp.where(pos, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, bisect, (lo, hi))
+    return 0.5 * (lo + hi)
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def best_response_iteration(delta: jax.Array, nodes: NodeParams,
+                            f_init: jax.Array, iters: int = 100,
+                            damping: float = 0.5) -> jax.Array:
+    """Stage-2 Nash equilibrium f* = (f_1*, ..., f_N*) for a fixed δ."""
+
+    def step(_, f):
+        F = jnp.sum(f)
+        f_rest = F - f
+        br = jax.vmap(best_response, in_axes=(0, None, 0, 0))(
+            f_rest, delta, nodes.gamma, nodes.mu)
+        return damping * br + (1.0 - damping) * f
+
+    return jax.lax.fori_loop(0, iters, step, f_init)
+
+
+class StackelbergSolution(NamedTuple):
+    delta_star: jax.Array
+    f_star: jax.Array
+    F_star: jax.Array
+    publisher_utility: jax.Array
+    node_utilities: jax.Array
+
+
+@partial(jax.jit, static_argnames=("outer_iters", "inner_iters"))
+def stackelberg_equilibrium(nodes: NodeParams, publisher: PublisherParams = PublisherParams(),
+                            outer_iters: int = 20, inner_iters: int = 60,
+                            ) -> StackelbergSolution:
+    """Backward-induction equilibrium: alternate δ ← δ*(F), f ← Nash(δ)."""
+    n = nodes.gamma.shape[0]
+    f = jnp.full((n,), 10.0, jnp.float32)
+    delta = jnp.asarray(100.0, jnp.float32)
+
+    def outer(_, state):
+        delta, f = state
+        f = best_response_iteration(delta, nodes, f, iters=inner_iters)
+        delta = optimal_delta(jnp.sum(f), publisher)
+        return delta, f
+
+    delta, f = jax.lax.fori_loop(0, outer_iters, outer, (delta, f))
+    F = jnp.sum(f)
+    u_nodes = jax.vmap(node_utility, in_axes=(0, 0, None, 0, 0))(
+        f, F - f, delta, nodes.gamma, nodes.mu)
+    return StackelbergSolution(delta, f, F, publisher_utility(delta, F, publisher), u_nodes)

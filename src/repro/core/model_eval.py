@@ -1,0 +1,107 @@
+"""ME — Model Evaluation (paper §4.2, Alg. 3), in JAX.
+
+Given the N FEL models W(k) and per-cluster dataset sizes |DS_m|:
+
+  gw(k) = Σ_m |DS_m| w^m(k) / |DS|                      (Eq. 1)
+  s_m   = <w^m, gw> / (‖w^m‖ ‖gw‖)                      (Eq. 2)
+  vote  = argmax_m s_m
+  P^i   : G_max for the voted node, G_min for the rest   (Alg. 3 lines 6-12)
+
+Two layouts are supported:
+
+* stacked — ``W`` as an (N, D) array of flattened models (paper scale,
+  and the layout the Pallas ``cosine_sim`` kernel consumes);
+* pytree — a list of parameter pytrees, flattened on the fly.
+
+``partial_terms``/``similarity_from_partials`` expose the decomposition used
+by the sharded in-graph consensus (DESIGN.md §3): cosine similarity reduces
+over the parameter axis, so each model-parallel shard contributes three
+partial scalars and the full models never travel over the network.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class MEResult(NamedTuple):
+    global_model: jax.Array      # (D,) — gw(k)
+    similarities: jax.Array      # (N,) — s_m
+    vote: jax.Array              # ()  int32 — e_best
+    predictions: jax.Array       # (N,) — P^i
+
+
+def flatten_model(tree: Any) -> jax.Array:
+    """Deterministic (sorted key-path) flattening of a parameter pytree."""
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    paths = sorted(paths, key=lambda kv: jax.tree_util.keystr(kv[0]))
+    return jnp.concatenate([jnp.ravel(leaf).astype(jnp.float32) for _, leaf in paths])
+
+
+def aggregate_global(W: jax.Array, data_sizes: jax.Array) -> jax.Array:
+    """Eq. 1 — data-size-weighted aggregation of (N, D) stacked models."""
+    weights = data_sizes.astype(jnp.float32) / jnp.sum(data_sizes)
+    return jnp.einsum("n,nd->d", weights, W.astype(jnp.float32))
+
+
+def cosine_similarities(W: jax.Array, gw: jax.Array, eps: float = 1e-12) -> jax.Array:
+    """Eq. 2 — cosine similarity of every row of W against gw."""
+    W = W.astype(jnp.float32)
+    gw = gw.astype(jnp.float32)
+    dots = W @ gw
+    wn = jnp.sqrt(jnp.sum(W * W, axis=-1))
+    gn = jnp.sqrt(jnp.sum(gw * gw))
+    return dots / jnp.maximum(wn * gn, eps)
+
+
+def make_predictions(vote: jax.Array, n: int, g_max: float = 0.99) -> jax.Array:
+    """Alg. 3 lines 6-12 — G_max on the voted index, G_min elsewhere.
+
+    G_min = (1 - G_max)/(N - 1) so that Σ_j p_j = 1 (paper §7.4).
+    """
+    g_min = (1.0 - g_max) / (n - 1)
+    return jnp.full((n,), g_min).at[vote].set(g_max)
+
+
+@partial(jax.jit, static_argnames=("g_max",))
+def model_evaluation(W: jax.Array, data_sizes: jax.Array,
+                     g_max: float = 0.99) -> MEResult:
+    """Full ME (Alg. 3) over stacked (N, D) models."""
+    gw = aggregate_global(W, data_sizes)
+    sims = cosine_similarities(W, gw)
+    vote = jnp.argmax(sims).astype(jnp.int32)
+    preds = make_predictions(vote, W.shape[0], g_max=g_max)
+    return MEResult(gw, sims, vote, preds)
+
+
+def model_evaluation_pytrees(models: Sequence[Any], data_sizes: Sequence[float],
+                             g_max: float = 0.99) -> MEResult:
+    """ME over a list of parameter pytrees (paper-faithful runtime path)."""
+    W = jnp.stack([flatten_model(m) for m in models])
+    return model_evaluation(W, jnp.asarray(data_sizes, jnp.float32), g_max=g_max)
+
+
+# ---------------------------------------------------------------------------
+# Decomposed similarity for the sharded consensus (beyond-paper optimization)
+# ---------------------------------------------------------------------------
+
+class PartialTerms(NamedTuple):
+    dot: jax.Array      # <w_shard, gw_shard>
+    w_sq: jax.Array     # ‖w_shard‖²
+    gw_sq: jax.Array    # ‖gw_shard‖²
+
+
+def partial_terms(w_shard: jax.Array, gw_shard: jax.Array) -> PartialTerms:
+    """Per-shard partial reductions; sum across shards then combine."""
+    w = w_shard.astype(jnp.float32)
+    g = gw_shard.astype(jnp.float32)
+    return PartialTerms(jnp.vdot(w, g), jnp.vdot(w, w), jnp.vdot(g, g))
+
+
+def similarity_from_partials(t: PartialTerms, eps: float = 1e-12) -> jax.Array:
+    """Combine (already summed-across-shards) partials into s_m."""
+    return t.dot / jnp.maximum(jnp.sqrt(t.w_sq) * jnp.sqrt(t.gw_sq), eps)

@@ -1,0 +1,74 @@
+"""Deterministic serialization of JAX pytrees for hashing/commitment.
+
+HCDS commits to H(nonce || model); the model is a pytree of arrays, so we
+need a canonical byte encoding that is stable across processes: sorted
+key-paths, dtype/shape headers, and raw little-endian array bytes.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Any
+
+import jax
+import numpy as np
+
+_MAGIC = b"RPR0"
+
+
+def _keystr(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def serialize_pytree(tree: Any) -> bytes:
+    """Canonical bytes of a pytree of arrays/scalars.
+
+    Layout: MAGIC | n_leaves | for each leaf (sorted by keypath):
+    len(path) path | len(dtype) dtype | ndim shape... | nbytes raw-bytes.
+    """
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    leaves = sorted(leaves, key=lambda kv: _keystr(kv[0]))
+    out = [_MAGIC, struct.pack("<I", len(leaves))]
+    for path, leaf in leaves:
+        arr = np.asarray(leaf)
+        path_b = _keystr(path).encode()
+        dtype_b = arr.dtype.str.encode()
+        out.append(struct.pack("<I", len(path_b)))
+        out.append(path_b)
+        out.append(struct.pack("<I", len(dtype_b)))
+        out.append(dtype_b)
+        out.append(struct.pack("<I", arr.ndim))
+        out.append(struct.pack(f"<{arr.ndim}q", *arr.shape))
+        raw = np.ascontiguousarray(arr).tobytes()
+        out.append(struct.pack("<Q", len(raw)))
+        out.append(raw)
+    return b"".join(out)
+
+
+def deserialize_pytree_flat(data: bytes) -> dict[str, np.ndarray]:
+    """Inverse of :func:`serialize_pytree`, returning {keypath: array}."""
+    if data[:4] != _MAGIC:
+        raise ValueError("bad magic — not a repro-serialized pytree")
+    off = 4
+    (n,) = struct.unpack_from("<I", data, off)
+    off += 4
+    out: dict[str, np.ndarray] = {}
+    for _ in range(n):
+        (plen,) = struct.unpack_from("<I", data, off)
+        off += 4
+        path = data[off : off + plen].decode()
+        off += plen
+        (dlen,) = struct.unpack_from("<I", data, off)
+        off += 4
+        dtype = np.dtype(data[off : off + dlen].decode())
+        off += dlen
+        (ndim,) = struct.unpack_from("<I", data, off)
+        off += 4
+        shape = struct.unpack_from(f"<{ndim}q", data, off)
+        off += 8 * ndim
+        (nbytes,) = struct.unpack_from("<Q", data, off)
+        off += 8
+        arr = np.frombuffer(data[off : off + nbytes], dtype=dtype).reshape(shape)
+        off += nbytes
+        out[path] = arr
+    return out

@@ -1,0 +1,9 @@
+from repro.data.synthetic import SyntheticImageDataset, make_mnist_like
+from repro.data.partition import partition_iid, partition_dirichlet, partition_label_limited
+from repro.data.tokens import TokenBatchSpec, synthetic_token_batches
+
+__all__ = [
+    "SyntheticImageDataset", "make_mnist_like",
+    "partition_iid", "partition_dirichlet", "partition_label_limited",
+    "TokenBatchSpec", "synthetic_token_batches",
+]

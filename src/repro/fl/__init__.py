@@ -1,0 +1,7 @@
+from repro.fl.client import Client, local_train
+from repro.fl.fedavg import fedavg
+from repro.fl.hierarchy import FELCluster, build_hierarchy
+from repro.fl.hfl_runtime import BHFLConfig, BHFLRuntime, RoundMetrics
+
+__all__ = ["Client", "local_train", "fedavg", "FELCluster", "build_hierarchy",
+           "BHFLConfig", "BHFLRuntime", "RoundMetrics"]

@@ -1,0 +1,53 @@
+"""FL client: local SGD training over the client's own data shard
+(paper §3.1 step 3)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.synthetic import SyntheticImageDataset
+from repro.models.mlp import MLPConfig, mlp_loss
+from repro.optim.sgd import sgd_init, sgd_update
+
+
+@dataclass
+class Client:
+    client_id: int
+    data: SyntheticImageDataset
+
+    @property
+    def data_size(self) -> int:
+        return len(self.data)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _sgd_step(params: Any, opt_state, x, y, key, cfg: MLPConfig,
+              lr: float, momentum: float, decay: float):
+    loss, grads = jax.value_and_grad(mlp_loss)(
+        params, x, y, cfg=cfg, train=True, dropout_key=key)
+    params, opt_state = sgd_update(grads, opt_state, params,
+                                   lr=lr, momentum=momentum, decay=decay)
+    return params, opt_state, loss
+
+
+def local_train(params: Any, client: Client, cfg: MLPConfig, *,
+                epochs: int = 1, batch_size: int = 32, lr: float = 1e-3,
+                momentum: float = 0.9, decay: float = 5e-4,
+                seed: int = 0) -> tuple[Any, float]:
+    """Run `epochs` of local SGD from `params`; returns (new_params, last_loss)."""
+    opt_state = sgd_init(params)
+    key = jax.random.key(seed)
+    loss = jnp.asarray(0.0)
+    for ep in range(epochs):
+        for x, y in client.data.batches(min(batch_size, client.data_size),
+                                        seed=seed + ep):
+            key, sub = jax.random.split(key)
+            params, opt_state, loss = _sgd_step(
+                params, opt_state, jnp.asarray(x), jnp.asarray(y), sub, cfg,
+                lr, momentum, decay)
+    return params, float(loss)

@@ -1,0 +1,21 @@
+"""FedAvg aggregation (McMahan et al. 2017) — the edge-level aggregation
+the paper uses inside each FEL cluster (§3.1 footnote 2)."""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def fedavg(models: Sequence[Any], weights: Sequence[float]) -> Any:
+    """Data-size-weighted average of parameter pytrees."""
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.sum(w)
+
+    def avg(*leaves):
+        stacked = jnp.stack([l.astype(jnp.float32) for l in leaves])
+        return jnp.einsum("n,n...->...", w, stacked).astype(leaves[0].dtype)
+
+    return jax.tree.map(avg, *models)

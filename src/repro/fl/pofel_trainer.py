@@ -1,0 +1,220 @@
+"""PoFEL-governed distributed training at LLM scale (DESIGN.md §3, §6).
+
+Mapping of the BHFL hierarchy onto the TPU mesh:
+
+* Each of ``n_clusters`` BCFL nodes owns a DIVERGENT model replica — the
+  "intermediate FEL model" w^c(k). Replicas are stored with a leading
+  cluster dim (C, ...) and trained embarrassingly-parallel with jax.vmap
+  (GSPMD shards the non-cluster dims over data (FSDP) and model (TP)).
+* `local_step` = one FEL iteration: per-cluster FedSGD on the cluster's
+  slice of the global batch (paper §3.1 step 3, footnote 2: FedSGD).
+* `pofel_round` = local step + the PoFEL consensus (Alg. 1) fully
+  in-graph: Eq. 1 weighted aggregation across the cluster dim, Eq. 2
+  cosine similarities via per-leaf partial reductions (models never move
+  — only 3·C scalars), honest votes, BTSV tally (Alg. 4), leader
+  election, then an OUTER optimizer step on the pseudo-gradient
+  (w_global − gw) and redistribution of the new global to all clusters.
+  With ``outer='sgd1'`` the outer step is gw itself — the paper-faithful
+  update; ``outer='nesterov'`` is the beyond-paper DiLoCo-style variant.
+
+The host-side blockchain (HCDS commit/reveal + ledger) consumes the
+returned similarity/leader stats at round boundaries (launch/train.py);
+crypto never enters the device graph (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.btsv import BTSVConfig, btsv_round, init_history
+from repro.models.model_api import Model
+from repro.models.transformer import FwdOptions
+
+
+@dataclass(frozen=True)
+class PoFELTrainConfig:
+    n_clusters: int = 8
+    cluster_axis: Optional[str] = None  # shard the cluster dim over this
+                                        # mesh axis (zero3 profile: "data")
+    inner_lr: float = 3e-4            # FedSGD step (paper: SGD at clients)
+    outer: str = "sgd1"               # 'sgd1' (paper Eq. 1) | 'nesterov'
+    outer_lr: float = 0.7
+    outer_momentum: float = 0.9
+    g_max: float = 0.99
+    btsv: BTSVConfig = field(default_factory=BTSVConfig)
+    aux_weight: float = 0.01
+    consensus_dtype: str = "float32"   # Eq. 1 accumulation dtype; "bfloat16"
+                                       # halves the aggregation all-reduce
+                                       # (beyond-paper §Perf lever)
+
+
+class PoFELTrainState(NamedTuple):
+    cluster_params: Any        # (C, ...) divergent replicas — W(k)
+    global_params: Any         # w_global — last agreed global model
+    outer_momentum: Any        # pytree like global_params (zeros for sgd1)
+    btsv_history: jax.Array    # (c_window, C) rolling BTS scores
+    round: jax.Array           # () int32
+
+
+class ConsensusMetrics(NamedTuple):
+    loss: jax.Array            # (C,) per-cluster losses
+    similarities: jax.Array    # (C,) Eq. 2
+    leader: jax.Array          # () int32 — e*(k)
+    vote_weights: jax.Array    # (C,) WV^i(k)
+    scores: jax.Array          # (C,) BTS scores
+
+
+def _broadcast_clusters(params: Any, C: int) -> Any:
+    return jax.tree.map(lambda t: jnp.broadcast_to(t[None], (C,) + t.shape), params)
+
+
+def init_train_state(model: Model, cfg: PoFELTrainConfig,
+                     key: jax.Array) -> PoFELTrainState:
+    params = model.init(key)
+    return PoFELTrainState(
+        cluster_params=_broadcast_clusters(params, cfg.n_clusters),
+        global_params=params,
+        outer_momentum=jax.tree.map(
+            lambda t: jnp.zeros(t.shape, jnp.float32), params),
+        btsv_history=init_history(cfg.n_clusters, cfg.btsv),
+        round=jnp.zeros((), jnp.int32),
+    )
+
+
+def abstract_train_state(model: Model, cfg: PoFELTrainConfig) -> PoFELTrainState:
+    return jax.eval_shape(
+        lambda: init_train_state(model, cfg, jax.random.key(0)))
+
+
+# ---------------------------------------------------------------------------
+# Local FEL iteration (per-cluster FedSGD)
+# ---------------------------------------------------------------------------
+
+def local_step(model: Model, cluster_params: Any, batch: dict,
+               cfg: PoFELTrainConfig,
+               opts: FwdOptions = FwdOptions()) -> tuple[Any, jax.Array]:
+    """One FedSGD step per cluster. batch leaves lead with (C, B/C, ...)."""
+
+    def one(params, b):
+        loss, grads = jax.value_and_grad(model.loss)(params, b, opts,
+                                                     cfg.aux_weight)
+        new = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - cfg.inner_lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new, loss
+
+    return jax.vmap(one, spmd_axis_name=cfg.cluster_axis)(cluster_params,
+                                                          batch)
+
+
+# ---------------------------------------------------------------------------
+# In-graph PoFEL consensus (Alg. 1, lines 2-5)
+# ---------------------------------------------------------------------------
+
+def _weighted_global(cluster_params: Any, lambdas: jax.Array,
+                     dtype: str = "float32") -> Any:
+    """Eq. 1: gw = Σ_c λ_c w^c — per-leaf contraction over the cluster dim."""
+    acc = jnp.dtype(dtype)
+    lam = (lambdas / jnp.sum(lambdas)).astype(acc)
+
+    def agg(leaf):
+        return jnp.einsum("c,c...->...", lam, leaf.astype(acc)
+                          ).astype(leaf.dtype)
+
+    return jax.tree.map(agg, cluster_params)
+
+
+def _similarities(cluster_params: Any, gw: Any, eps: float = 1e-12) -> jax.Array:
+    """Eq. 2 via per-leaf partial reductions: the full models are never
+    gathered — each leaf contributes <w_c, gw>, ‖w_c‖² partials; ‖gw‖² is
+    shared. Ellipsis einsums (no reshape) keep leaf shardings intact —
+    reshaping a sharded leaf would force a gather (EXPERIMENTS §Perf)."""
+    leaves_w = jax.tree.leaves(cluster_params)
+    leaves_g = jax.tree.leaves(gw)
+    C = leaves_w[0].shape[0]
+    dot = jnp.zeros((C,), jnp.float32)
+    wsq = jnp.zeros((C,), jnp.float32)
+    gsq = jnp.zeros((), jnp.float32)
+    for w, g in zip(leaves_w, leaves_g):
+        wf = w.astype(jnp.float32)
+        gf = g.astype(jnp.float32)
+        dot = dot + jnp.einsum("c...,...->c", wf, gf)
+        wsq = wsq + jnp.einsum("c...,c...->c", wf, wf)
+        gsq = gsq + jnp.einsum("...,...->", gf, gf)
+    return jnp.clip(dot / jnp.maximum(jnp.sqrt(wsq) * jnp.sqrt(gsq), eps),
+                    -1.0, 1.0)
+
+
+def consensus(cluster_params: Any, lambdas: jax.Array,
+              btsv_history: jax.Array, cfg: PoFELTrainConfig,
+              ) -> tuple[Any, jax.Array, ConsensusMetrics]:
+    """Alg. 1 lines 2-5 (HCDS is host-side): returns (gw, new_history,
+    metrics). All C honest clusters vote argmax-similarity; the BTSV tally
+    still runs so vote weights and scores are produced for the ledger."""
+    C = lambdas.shape[0]
+    gw = _weighted_global(cluster_params, lambdas, cfg.consensus_dtype)
+    sims = _similarities(cluster_params, gw)
+    vote = jnp.argmax(sims).astype(jnp.int32)
+    votes = jnp.full((C,), vote, jnp.int32)
+    g_min = (1.0 - cfg.g_max) / (C - 1)
+    p_row = jnp.full((C,), g_min, jnp.float32).at[vote].set(cfg.g_max)
+    P = jnp.broadcast_to(p_row, (C, C))
+    res, new_history = btsv_round(votes, P, btsv_history, cfg.btsv)
+    metrics = ConsensusMetrics(jnp.zeros((C,)), sims, res.leader,
+                               res.weights, res.scores)
+    return gw, new_history, metrics
+
+
+# ---------------------------------------------------------------------------
+# Full PoFEL round: local step + consensus + outer update + redistribution
+# ---------------------------------------------------------------------------
+
+def pofel_round(model: Model, state: PoFELTrainState, batch: dict,
+                lambdas: jax.Array, cfg: PoFELTrainConfig,
+                opts: FwdOptions = FwdOptions(),
+                ) -> tuple[PoFELTrainState, ConsensusMetrics]:
+    cluster_params, losses = local_step(model, state.cluster_params, batch,
+                                        cfg, opts)
+    gw, new_history, metrics = consensus(cluster_params, lambdas,
+                                         state.btsv_history, cfg)
+
+    if cfg.outer == "sgd1":
+        # paper-faithful: the aggregated model IS the next global model
+        new_global = gw
+        new_mom = state.outer_momentum
+    else:
+        # beyond-paper: Nesterov outer step on the pseudo-gradient
+        def new_mom_leaf(gp, gw_leaf, mom):
+            delta = gp.astype(jnp.float32) - gw_leaf.astype(jnp.float32)
+            return cfg.outer_momentum * mom + delta
+
+        def new_global_leaf(gp, gw_leaf, mom_new):
+            delta = gp.astype(jnp.float32) - gw_leaf.astype(jnp.float32)
+            step = cfg.outer_lr * (delta + cfg.outer_momentum * mom_new)
+            return (gp.astype(jnp.float32) - step).astype(gp.dtype)
+
+        new_mom = jax.tree.map(new_mom_leaf, state.global_params, gw,
+                               state.outer_momentum)
+        new_global = jax.tree.map(new_global_leaf, state.global_params, gw,
+                                  new_mom)
+
+    new_cluster = _broadcast_clusters(new_global, cfg.n_clusters)
+    new_state = PoFELTrainState(new_cluster, new_global, new_mom,
+                                new_history, state.round + 1)
+    return new_state, metrics._replace(loss=losses)
+
+
+def train_step(model: Model, state: PoFELTrainState, batch: dict,
+               cfg: PoFELTrainConfig,
+               opts: FwdOptions = FwdOptions(),
+               ) -> tuple[PoFELTrainState, jax.Array]:
+    """Plain FEL iteration (no consensus) — lowered separately so the
+    dry-run can quantify the consensus overhead (EXPERIMENTS §Perf)."""
+    cluster_params, losses = local_step(model, state.cluster_params, batch,
+                                        cfg, opts)
+    return state._replace(cluster_params=cluster_params), losses

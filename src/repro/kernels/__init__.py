@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the PoFEL hot spots (DESIGN.md §5).
+
+Each kernel ships as <name>.py (pl.pallas_call + BlockSpec), with a jit'd
+wrapper in ops.py and a pure-jnp oracle in ref.py. On CPU the wrappers run
+the kernels in interpret mode; on TPU they compile to Mosaic.
+"""
+
+from repro.kernels.ops import (batched_cosine_similarity, flash_attention,
+                               weighted_aggregate, wkv6_recurrence)
+
+__all__ = ["batched_cosine_similarity", "flash_attention",
+           "weighted_aggregate", "wkv6_recurrence"]

@@ -1,0 +1,105 @@
+"""Flash attention (blocked online softmax) for the serving path.
+
+Grid = (B·H, S/bq, S/bk) with the KV index innermost so the running
+(m, l, acc) state for one Q tile lives in VMEM scratch across the KV
+sweep. MXU-aligned tiles: bq = bk = 128, full head_dim per tile.
+
+Supports causal and sliding-window masking (the `long_500k` variant for
+full-attention architectures, DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  bq: int, bk: int, causal: bool, window: int, seq_len: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)             # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)             # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+    hd = q.shape[-1]
+    s = (q @ k.T) / jnp.sqrt(jnp.float32(hd))    # (bq, bk)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < seq_len
+    if causal:
+        mask = jnp.logical_and(mask, q_pos >= k_pos)
+    if window > 0:
+        mask = jnp.logical_and(mask, q_pos - k_pos < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = corr * l_scr[...] + jnp.sum(p, axis=1)
+    acc_scr[...] = corr[:, None] * acc_scr[...] + p @ v
+    m_scr[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """(B, H, S, hd) single-group attention (GQA grouping is the wrapper's
+    job — see ops.flash_attention)."""
+    B, H, S, hd = q.shape
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    pad = (-S) % max(bq, bk)
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    Sp = q.shape[2]
+    qf = q.reshape(B * H, Sp, hd)
+    kf = k.reshape(B * H, Sp, hd)
+    vf = v.reshape(B * H, Sp, hd)
+    grid = (B * H, Sp // bq, Sp // bk)
+
+    from jax.experimental.pallas import tpu as pltpu
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, causal=causal,
+                               window=window, seq_len=S)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sp, hd)[:, :, :S]

@@ -1,0 +1,96 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode; on TPU set
+``interpret=False`` (the default flips automatically via backend check).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import cosine_sim as _cs
+from repro.kernels import flash_attention as _fa
+from repro.kernels import weighted_agg as _wa
+from repro.kernels import wkv6 as _wkv
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def batched_cosine_similarity(W: jax.Array, gw: jax.Array,
+                              interpret: bool | None = None) -> jax.Array:
+    """(N, D), (D,) → (N,) cosine similarities via the fused-partials kernel."""
+    interp = _interpret_default() if interpret is None else interpret
+    dot, wsq, gsq = _cs.cosine_partials(W, gw, interpret=interp)
+    return dot / jnp.maximum(jnp.sqrt(wsq) * jnp.sqrt(gsq), 1e-12)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def weighted_aggregate(W: jax.Array, weights: jax.Array,
+                       interpret: bool | None = None) -> jax.Array:
+    """(N, D), (N,) → (D,) — paper Eq. 1."""
+    interp = _interpret_default() if interpret is None else interpret
+    return _wa.weighted_aggregate(W, weights, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_recurrence(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                    u: jax.Array, s0: jax.Array, chunk: int = 128,
+                    interpret: bool | None = None):
+    """Batched-head WKV6 recurrence (B, S, H, K) layout → (o, final state).
+
+    Pads S to a chunk multiple, flattens (B, H) and runs the VMEM-resident
+    Pallas kernel.
+    """
+    interp = _interpret_default() if interpret is None else interpret
+    B, S, H, K = r.shape
+    chunk = min(chunk, max(S, 1))
+    pad = (-S) % chunk
+
+    def flat(t):
+        t = t.transpose(0, 2, 1, 3).reshape(B * H, S, K)
+        if pad:
+            t = jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+        return t.astype(jnp.float32)
+
+    rf, kf, vf = flat(r), flat(k), flat(v)
+    # pad decay with ones so the state is untouched in padded steps
+    wf = flat(w)
+    if pad:
+        wf = wf.at[:, S:, :].set(1.0)
+    uf = jnp.broadcast_to(u.astype(jnp.float32)[None], (B, H, K)
+                          ).reshape(B * H, K)
+    s0f = s0.astype(jnp.float32).reshape(B * H, K, K)
+    o, s_fin = _wkv.wkv6(rf, kf, vf, wf, uf, s0f, chunk=chunk,
+                         interpret=interp)
+    o = o[:, :S].reshape(B, H, S, K).transpose(0, 2, 1, 3)
+    return o.astype(r.dtype), s_fin.reshape(B, H, K, K)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    interpret: bool | None = None) -> jax.Array:
+    """GQA-aware flash attention.
+
+    q: (B, S, Hq, hd); k, v: (B, S, Hk, hd) with Hq % Hk == 0.
+    Returns (B, S, Hq, hd).
+    """
+    interp = _interpret_default() if interpret is None else interpret
+    B, S, Hq, hd = q.shape
+    Hk = k.shape[2]
+    G = Hq // Hk
+    # expand KV heads to Q heads (kernel works on matched heads); layout to
+    # (B, H, S, hd)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1)
+    vt = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1)
+    o = _fa.flash_attention(qt, kt, vt, causal=causal, window=window,
+                            interpret=interp)
+    return o.transpose(0, 2, 1, 3)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref` side of the
+kernel ↔ reference allclose tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_similarity_ref(W: jax.Array, gw: jax.Array,
+                          eps: float = 1e-12) -> jax.Array:
+    """(N, D), (D,) → (N,) cosine similarities (paper Eq. 2)."""
+    Wf = W.astype(jnp.float32)
+    gf = gw.astype(jnp.float32)
+    dots = Wf @ gf
+    wn = jnp.sqrt(jnp.sum(Wf * Wf, axis=-1))
+    gn = jnp.sqrt(jnp.sum(gf * gf))
+    return dots / jnp.maximum(wn * gn, eps)
+
+
+def cosine_partials_ref(W: jax.Array, gw: jax.Array):
+    """(N, D), (D,) → (dot (N,), wsq (N,), gsq ()) fused-pass partials."""
+    Wf = W.astype(jnp.float32)
+    gf = gw.astype(jnp.float32)
+    return Wf @ gf, jnp.sum(Wf * Wf, axis=-1), jnp.sum(gf * gf)
+
+
+def weighted_aggregate_ref(W: jax.Array, weights: jax.Array) -> jax.Array:
+    """(N, D), (N,) → (D,) normalized weighted sum (paper Eq. 1)."""
+    lam = weights.astype(jnp.float32)
+    lam = lam / jnp.sum(lam)
+    return jnp.einsum("n,nd->d", lam, W.astype(jnp.float32))
+
+
+def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: jax.Array, s0: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(BH, S, K) WKV6 recurrence oracle (lax.scan over time).
+
+    o_t = r_t · (S + diag(u)·k_tᵀv_t);  S ← diag(w_t)·S + k_tᵀv_t.
+    """
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(state, inputs):
+        r_t, k_t, v_t, w_t = inputs                       # (BH, K) each
+        kv = k_t[:, :, None] * v_t[:, None, :]            # (BH, K, K)
+        o_t = jnp.sum(r_t[:, :, None]
+                      * (state + uf[:, :, None] * kv), axis=1)
+        return w_t[:, :, None] * state + kv, o_t
+
+    xs = tuple(t.transpose(1, 0, 2) for t in (rf, kf, vf, wf))
+    s_final, os_ = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return os_.transpose(1, 0, 2), s_final
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0) -> jax.Array:
+    """(B, H, S, hd) naive attention oracle (fp32 softmax)."""
+    B, H, S, hd = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask = mask & (qpos >= kpos)
+    if window > 0:
+        mask = mask & (qpos - kpos < window)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

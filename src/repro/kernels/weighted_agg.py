@@ -1,0 +1,51 @@
+"""Fused weighted model aggregation — paper Eq. 1 as a single HBM pass.
+
+gw[d] = Σ_n λ_n W[n, d] with λ = data_sizes / Σ data_sizes.
+
+Tiling: grid over D; each step loads a (N, bd) column panel of the stacked
+models plus the (1, N) weight row (VMEM-resident across the grid), and
+emits a (bd,) slice of gw. N (number of BCFL nodes / clusters) is small
+(≤ a few hundred), so the full N extent fits a VMEM tile; the kernel is a
+pure streaming reduction over HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _weighted_agg_kernel(w_ref, lam_ref, out_ref):
+    w = w_ref[...].astype(jnp.float32)          # (N, bd)
+    lam = lam_ref[...].astype(jnp.float32)      # (1, N)
+    out_ref[...] = (lam @ w)[0]                 # (bd,)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def weighted_aggregate(W: jax.Array, weights: jax.Array, *,
+                       block_d: int = 2048, interpret: bool = True) -> jax.Array:
+    """(N, D), (N,) → (D,) normalized weighted aggregate."""
+    N, D = W.shape
+    lam = weights.astype(jnp.float32)
+    lam = (lam / jnp.sum(lam)).reshape(1, N)
+    bd = min(block_d, D)
+    pad_d = (-D) % bd
+    if pad_d:
+        W = jnp.pad(W, ((0, 0), (0, pad_d)))
+    Dp = W.shape[1]
+
+    out = pl.pallas_call(
+        _weighted_agg_kernel,
+        grid=(Dp // bd,),
+        in_specs=[
+            pl.BlockSpec((N, bd), lambda j: (0, j)),
+            pl.BlockSpec((1, N), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((Dp,), jnp.float32),
+        interpret=interpret,
+    )(W, lam)
+    return out[:D]

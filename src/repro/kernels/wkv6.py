@@ -1,0 +1,97 @@
+"""WKV6 recurrence kernel — the RWKV-6 time-mixing hot spot.
+
+The recurrence (per head, K×K matrix state S):
+
+    o_t = r_t · (S_{t-1} + diag(u) · k_tᵀ v_t)
+    S_t = diag(w_t) · S_{t-1} + k_tᵀ v_t
+
+On TPU the XLA lowering of the ``lax.scan`` reference round-trips the
+(K, K) state through HBM every timestep. This kernel keeps the state in a
+VMEM scratch across an in-kernel ``fori_loop`` over a sequence chunk, and
+across chunks via the sequential minor grid dimension — one HBM write of
+the state per (batch·head) instead of per timestep. Arithmetic intensity
+rises from ~1 FLOP/byte (scan) to ~S_chunk FLOP/byte on the state.
+
+Grid: (B·H, S/chunk) — the chunk dim iterates sequentially (TPU grid
+order), r/k/v/w tiles of (chunk, K) stream through VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+                 o_ref, s_out_ref, state_scr, *, chunk: int):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = s0_ref[0]                    # (K, K)
+
+    u = u_ref[0]                                      # (K,)
+
+    def step(t, state):
+        r_t = r_ref[0, t, :]                          # (K,)
+        k_t = k_ref[0, t, :]
+        v_t = v_ref[0, t, :]
+        w_t = w_ref[0, t, :]
+        kv = k_t[:, None] * v_t[None, :]              # (K, K)
+        o_t = jnp.sum(r_t[:, None] * (state + u[:, None] * kv), axis=0)
+        o_ref[0, t, :] = o_t.astype(o_ref.dtype)
+        return w_t[:, None] * state + kv
+
+    state = jax.lax.fori_loop(0, chunk, step, state_scr[...])
+    state_scr[...] = state
+
+    @pl.when(ci == nc - 1)
+    def _finalize():
+        s_out_ref[0] = state
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, s0: jax.Array, *, chunk: int = 128,
+         interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Run the WKV6 recurrence.
+
+    r, k, v, w: (BH, S, K) — batch·heads flattened; u: (BH, K) per-head
+    bonus (pre-broadcast); s0: (BH, K, K) initial state.
+    Returns (o (BH, S, K), final state (BH, K, K)). S must divide by chunk
+    (callers pad).
+    """
+    BH, S, K = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, f"S={S} must be a multiple of chunk={chunk}"
+    grid = (BH, S // chunk)
+
+    kernel = functools.partial(_wkv6_kernel, chunk=chunk)
+    o, s_out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, K), lambda b, c: (b, c, 0)),   # r
+            pl.BlockSpec((1, chunk, K), lambda b, c: (b, c, 0)),   # k
+            pl.BlockSpec((1, chunk, K), lambda b, c: (b, c, 0)),   # v
+            pl.BlockSpec((1, chunk, K), lambda b, c: (b, c, 0)),   # w
+            pl.BlockSpec((1, K), lambda b, c: (b, 0)),             # u
+            pl.BlockSpec((1, K, K), lambda b, c: (b, 0, 0)),       # s0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, K), lambda b, c: (b, c, 0)),   # o
+            pl.BlockSpec((1, K, K), lambda b, c: (b, 0, 0)),       # s_out
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, K), jnp.float32),
+            jax.ShapeDtypeStruct((BH, K, K), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, K), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return o, s_out

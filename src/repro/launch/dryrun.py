@@ -1,0 +1,115 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: .lower().compile() every (architecture × input shape ×
+mesh) combination on 512 placeholder host devices, print memory/cost
+analysis, and emit roofline rows (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS
+from repro.configs.shapes import INPUT_SHAPES
+from repro.launch.costs import step_cost
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze, model_flops_estimate
+from repro.launch.specs import build_setup
+
+LLM_ARCHS = [a for a in ARCH_IDS if a != "mnist-mlp"]
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    shape = INPUT_SHAPES[shape_name]
+    t0 = time.time()
+    setup = build_setup(arch, shape_name, mesh)
+    with mesh:
+        lowered = setup.jitted.lower(*setup.abstract_args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    model_flops = model_flops_estimate(setup.model.n_active_params(),
+                                       shape.kind, shape.global_batch,
+                                       shape.seq_len)
+    cost = step_cost(setup.model, shape)
+    roof = analyze(compiled, arch=arch, shape=shape_name,
+                   mesh_name=mesh_name, n_devices=mesh.size,
+                   model_flops=model_flops, analytic_flops=cost.flops,
+                   analytic_bytes=cost.hbm_bytes)
+    row = roof.row()
+    row.update(lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+               memory_analysis=str(mem))
+    if verbose:
+        print(f"== {arch} × {shape_name} × {mesh_name} ==")
+        print(f"   lower {t_lower:.1f}s  compile {t_compile:.1f}s")
+        print(f"   memory_analysis: {mem}")
+        print(f"   analytic: flops={cost.flops:.3e} hbm_bytes={cost.hbm_bytes:.3e}"
+              f"  raw cost_analysis: flops/dev={roof.raw_cost_flops:.3e}")
+        print(f"   collective bytes/dev (trip-scaled)="
+              f"{roof.collective_bytes_per_device:.3e}")
+        print(f"   roofline: compute={roof.compute_s*1e3:.2f}ms "
+              f"memory={roof.memory_s*1e3:.2f}ms "
+              f"collective={roof.collective_s*1e3:.2f}ms "
+              f"→ {roof.dominant}-bound; useful={roof.useful_flops_ratio:.2f}")
+        print(f"   collectives (exec counts): "
+              f"{dict(roof.collectives.count_by_kind)}")
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=LLM_ARCHS + ["all"])
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + ["all"])
+    ap.add_argument("--all", action="store_true",
+                    help="all arch × shape combos")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--json", default=None, help="append JSON rows here")
+    args = ap.parse_args()
+
+    archs = LLM_ARCHS if (args.all or args.arch in (None, "all")) else [args.arch]
+    shapes = (list(INPUT_SHAPES) if (args.all or args.shape in (None, "all"))
+              else [args.shape])
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    rows, failures = [], []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    rows.append(run_one(arch, shape, mp))
+                except Exception as e:
+                    failures.append((arch, shape, mp, repr(e)))
+                    print(f"!! FAIL {arch} × {shape} × "
+                          f"{'2x16x16' if mp else '16x16'}: {e}")
+                    traceback.print_exc()
+    if args.json:
+        existing = []
+        if os.path.exists(args.json):
+            existing = json.loads(open(args.json).read())
+        existing.extend(rows)
+        with open(args.json, "w") as f:
+            json.dump(existing, f, indent=1, default=str)
+    print(f"\n{len(rows)} combos OK, {len(failures)} failed")
+    if failures:
+        for f_ in failures:
+            print("  FAILED:", f_)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""§Perf hillclimb driver: compile one (arch × shape) under a named sharding
+profile / forward-option variant, report the three roofline terms and the
+collective breakdown for the hypothesis → change → measure log.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb \
+      --arch yi-6b --shape train_4k --profile zero3 [--json perf.json]
+"""
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.configs.shapes import INPUT_SHAPES
+from repro.launch.costs import step_cost
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze, model_flops_estimate
+from repro.launch.specs import build_setup, build_train_setup, default_profile_config
+
+
+def run(arch: str, shape_name: str, profile: str, multi_pod: bool = False,
+        opts_overrides: dict | None = None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shape = INPUT_SHAPES[shape_name]
+    t0 = time.time()
+    if shape.kind == "train":
+        tcfg, opts = default_profile_config(profile, mesh)
+        if opts_overrides:
+            opts = opts._replace(**opts_overrides)
+        setup = build_train_setup(arch, mesh, shape, tcfg, opts,
+                                  profile=profile)
+    elif shape.kind == "prefill":
+        from repro.launch.specs import build_prefill_setup
+        setup = build_prefill_setup(arch, mesh, shape, profile=profile)
+    else:
+        from repro.launch.specs import build_decode_setup
+        setup = build_decode_setup(arch, mesh, shape, profile=profile)
+    with mesh:
+        compiled = setup.jitted.lower(*setup.abstract_args).compile()
+    t_total = time.time() - t0
+    cost = step_cost(setup.model, shape)
+    roof = analyze(compiled, arch=arch, shape=shape_name,
+                   mesh_name=("2x16x16" if multi_pod else "16x16"),
+                   n_devices=mesh.size,
+                   model_flops=model_flops_estimate(
+                       setup.model.n_active_params(), shape.kind,
+                       shape.global_batch, shape.seq_len),
+                   analytic_flops=cost.flops, analytic_bytes=cost.hbm_bytes)
+    row = roof.row()
+    row.update(profile=profile, compile_s=round(t_total, 1),
+               opts_overrides=opts_overrides or {},
+               memory_analysis=str(compiled.memory_analysis()))
+    print(f"== {arch} × {shape_name} × {profile} "
+          f"{opts_overrides or ''} (compile {t_total:.0f}s) ==")
+    print(f"   compute={roof.compute_s:.3f}s memory={roof.memory_s:.3f}s "
+          f"collective={roof.collective_s:.3f}s → {roof.dominant}-bound")
+    print(f"   collective breakdown (bytes/dev): "
+          f"{ {k: f'{v:.2e}' for k, v in roof.collectives.bytes_by_kind.items()} }")
+    print(f"   collective exec counts: {dict(roof.collectives.count_by_kind)}")
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--profile", default="baseline",
+                    choices=["baseline", "sp_attn", "zero3", "serve_tp"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--override", action="append", default=[],
+                    help="FwdOptions override key=value (e.g. remat=False)")
+    args = ap.parse_args()
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=")
+        overrides[k] = {"True": True, "False": False}.get(v, v)
+    row = run(args.arch, args.shape, args.profile, args.multi_pod,
+              overrides or None)
+    if args.json:
+        rows = json.loads(open(args.json).read()) if os.path.exists(args.json) else []
+        rows.append(row)
+        json.dump(rows, open(args.json, "w"), indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,240 @@
+"""Roofline-term extraction from compiled dry-run artifacts (DESIGN.md §7).
+
+TPU v5e constants: 197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link
+ICI.
+
+Methodology (documented in EXPERIMENTS.md §Dry-run):
+* compute/memory terms — analytic formulas (launch/costs.py). XLA's
+  ``cost_analysis`` counts each scan (``while``) body once, under-reporting
+  by ~n_layers for scan-over-layers models; raw values are still recorded.
+* collective term — per-device HLO text parsing with while-trip-count
+  scaling: compiled XLA attaches ``backend_config={"known_trip_count":
+  {"n": ...}}`` to while ops, so collective bytes inside a scan body are
+  multiplied by the trip count (nested loops multiply).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64"
+                       r"|f64|c64|c128)\[([0-9,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(.*\)\s*->")
+_WHILE_RE = re.compile(r"while\(.*?\).*?body=(%[\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count.*?"n":"(\d+)"')
+_CALLS_RE = re.compile(r"calls=(%[\w.\-]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def add(self, kind: str, nbytes: int, mult: int) -> None:
+        self.bytes_by_kind[kind] = self.bytes_by_kind.get(kind, 0) + nbytes * mult
+        self.count_by_kind[kind] = self.count_by_kind.get(kind, 0) + mult
+
+
+def _split_computations(hlo_text: str) -> Dict[str, Tuple[bool, List[str]]]:
+    """{comp_name: (is_entry, lines)}."""
+    comps: Dict[str, Tuple[bool, List[str]]] = {}
+    cur, cur_entry = None, False
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line.strip())
+        if m and line.strip().endswith("{"):
+            cur = m.group(1)
+            cur_entry = line.strip().startswith("ENTRY")
+            comps[cur] = (cur_entry, [])
+        elif cur is not None:
+            comps[cur][1].append(line)
+    return comps
+
+
+def _multipliers(comps: Dict[str, Tuple[bool, List[str]]]) -> Dict[str, int]:
+    """Execution-count multiplier per computation (ENTRY = 1; while bodies ×
+    known_trip_count, propagated through nesting and fusion `calls=`)."""
+    # edges: parent -> (child, factor)
+    edges: Dict[str, List[Tuple[str, int]]] = {c: [] for c in comps}
+    entry = None
+    for name, (is_entry, lines) in comps.items():
+        if is_entry:
+            entry = name
+        for line in lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                tm = _TRIP_RE.search(line)
+                trip = int(tm.group(1)) if tm else 1
+                edges[name].append((wm.group(1), trip))
+            for cm in _CALLS_RE.finditer(line):
+                edges[name].append((cm.group(1), 1))
+    mult: Dict[str, int] = {c: 0 for c in comps}
+    if entry is None:
+        return {c: 1 for c in comps}
+    mult[entry] = 1
+    # propagate (DAG; a few sweeps suffice)
+    for _ in range(12):
+        changed = False
+        for parent, kids in edges.items():
+            if mult.get(parent, 0) == 0:
+                continue
+            for child, factor in kids:
+                new = mult[parent] * factor
+                if child in mult and new > mult[child]:
+                    mult[child] = new
+                    changed = True
+        if not changed:
+            break
+    return {c: max(m, 1) for c, m in mult.items()}
+
+
+def parse_collectives(hlo_text: str, scale_by_trip_count: bool = True
+                      ) -> CollectiveStats:
+    """Sum operand bytes of every collective op (per-device), scaling ops
+    inside scan bodies by the loop trip count."""
+    comps = _split_computations(hlo_text)
+    mult = (_multipliers(comps) if scale_by_trip_count
+            else {c: 1 for c in comps})
+    stats = CollectiveStats()
+    for name, (_, lines) in comps.items():
+        m = mult.get(name, 1)
+        for line in lines:
+            stripped = line.strip()
+            kind = None
+            for c in _COLLECTIVES:
+                if f" {c}(" in stripped or f" {c}-start(" in stripped:
+                    kind = c
+                    break
+            if kind is None:
+                continue
+            try:
+                args = stripped.split("(", 1)[1]
+            except IndexError:
+                continue
+            nbytes = sum(_shape_bytes(sm.group(1), sm.group(2))
+                         for sm in _SHAPE_RE.finditer(args))
+            if nbytes == 0:
+                rm = _SHAPE_RE.search(stripped)
+                nbytes = _shape_bytes(rm.group(1), rm.group(2)) if rm else 0
+            stats.add(kind, nbytes, m)
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops_global: float                 # analytic (costs.py)
+    hbm_bytes_global: float             # analytic (costs.py)
+    collective_bytes_per_device: float  # parsed, trip-count scaled
+    collectives: CollectiveStats
+    model_flops: float                  # 6·N·D (train) / 2·N·B (decode)
+    n_devices: int
+    raw_cost_flops: float = 0.0         # cost_analysis() as-is (advisory)
+    raw_cost_bytes: float = 0.0
+    peak_memory_bytes: float = 0.0      # memory_analysis (advisory on CPU)
+    arg_bytes_per_device: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_global / (self.n_devices * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_global / (self.n_devices * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops_global if self.flops_global else 0.0
+
+    @property
+    def bound_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops, "hlo_flops": self.flops_global,
+            "useful_ratio": self.useful_flops_ratio,
+            "collective_counts": dict(self.collectives.count_by_kind),
+            "collective_bytes": dict(self.collectives.bytes_by_kind),
+            "raw_cost_flops_per_dev": self.raw_cost_flops,
+            "raw_cost_bytes_per_dev": self.raw_cost_bytes,
+            "arg_gb_per_dev": self.arg_bytes_per_device / 1e9,
+        }
+
+
+def model_flops_estimate(n_params_active: int, shape_kind: str,
+                         global_batch: int, seq_len: int) -> float:
+    """MODEL_FLOPS: 6·N·tokens for training, 2·N·tokens for prefill,
+    2·N·batch per decoded token."""
+    if shape_kind == "train":
+        return 6.0 * n_params_active * global_batch * seq_len
+    if shape_kind == "prefill":
+        return 2.0 * n_params_active * global_batch * seq_len
+    return 2.0 * n_params_active * global_batch
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_name: str,
+            n_devices: int, model_flops: float, analytic_flops: float,
+            analytic_bytes: float) -> Roofline:
+    raw_flops = raw_bytes = 0.0
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        raw_flops = float(cost.get("flops", 0.0))
+        raw_bytes = float(cost.get("bytes accessed", 0.0))
+    except Exception:
+        pass
+    coll = parse_collectives(compiled.as_text())
+    peak = arg_b = 0.0
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            arg_b = float(getattr(ma, "argument_size_in_bytes", 0))
+            peak = float(getattr(ma, "temp_size_in_bytes", 0)) + arg_b
+    except Exception:
+        pass
+    return Roofline(arch, shape, mesh_name, analytic_flops, analytic_bytes,
+                    coll.total_bytes, coll, model_flops, n_devices,
+                    raw_flops, raw_bytes, peak, arg_b)

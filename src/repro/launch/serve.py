@@ -1,0 +1,108 @@
+"""Serving launcher: batched prefill + decode from the PoFEL global model.
+
+On this CPU container it serves a REDUCED variant for real tokens; the
+full-scale serving paths (decode_32k, long_500k) are exercised via
+``python -m repro.launch.dryrun --shape decode_32k`` etc.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.model_api import Model
+from repro.models.transformer import FwdOptions
+
+
+def serve_reduced(arch: str, batch: int, prompt_len: int, gen: int,
+                  seed: int, temperature: float) -> None:
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.key(seed))
+    total = prompt_len + gen
+
+    rng = np.random.default_rng(seed)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=(batch, prompt_len)), jnp.int32)
+    b = {"tokens": prompts}
+    if model.needs_context():
+        b["context"] = 0.1 * jnp.ones(model.context_shape(batch), jnp.float32)
+
+    # prefill
+    t0 = time.perf_counter()
+    logits, cache = model.prefill(params, b, FwdOptions(remat=False))
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    # grow attention caches to the full generation length
+    def grow(leaf):
+        # pad any axis whose extent == prompt_len (the cache sequence axis)
+        for ax, s in enumerate(leaf.shape):
+            if s == prompt_len and leaf.ndim >= 3:
+                pad = [(0, 0)] * leaf.ndim
+                pad[ax] = (0, gen)
+                return jnp.pad(leaf, pad)
+        return leaf
+
+    if not (cfg.rwkv or cfg.family == "hybrid"):
+        cache = jax.tree.map(grow, cache)
+    else:
+        # recurrent caches are O(1); replay the prompt through decode steps
+        cache = model.init_cache(batch, total)
+        for i in range(prompt_len):
+            logits, cache = model.decode_step(params, cache,
+                                              prompts[:, i:i + 1],
+                                              jnp.asarray(i, jnp.int32))
+
+    decode = jax.jit(model.decode_step)
+    key = jax.random.key(seed + 1)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    out = [tok]
+    t0 = time.perf_counter()
+    for i in range(prompt_len, total - 1):
+        logits, cache = decode(params, cache, tok, jnp.asarray(i, jnp.int32))
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(
+                sub, logits[:, -1].astype(jnp.float32) / temperature
+            ).astype(jnp.int32)[:, None]
+        else:
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+
+    gen_tokens = np.concatenate([np.asarray(t) for t in out], axis=1)
+    print(f"arch={arch} reduced | prefill {prompt_len} toks × {batch} reqs: "
+          f"{t_prefill*1e3:.0f}ms | decode {gen_tokens.shape[1]} steps: "
+          f"{t_decode*1e3:.0f}ms "
+          f"({t_decode/max(gen_tokens.shape[1],1)*1e3:.1f} ms/tok)")
+    for r in range(min(batch, 2)):
+        print(f"  req{r}: {gen_tokens[r].tolist()}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b",
+                    choices=[a for a in ARCH_IDS if a != "mnist-mlp"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+    serve_reduced(args.arch, args.batch, args.prompt_len, args.gen,
+                  args.seed, args.temperature)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,305 @@
+"""Per-(arch × input-shape × mesh) step construction for the dry-run and
+the launchers: abstract inputs (ShapeDtypeStruct — no allocation) plus
+NamedSharding-annotated jitted step functions.
+
+Three step kinds, per the assigned input shapes:
+  train    → ``pofel_round``  (local FEL step + in-graph PoFEL consensus)
+  prefill  → ``Model.prefill``
+  decode   → ``Model.decode_step`` (one token against a seq_len KV cache)
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.shapes import INPUT_SHAPES, LONG_CONTEXT_WINDOW, InputShape
+from repro.fl import pofel_trainer as pt
+from repro.launch.mesh import mesh_axes
+from repro.models.config import ArchConfig
+from repro.models.model_api import Model
+from repro.models.sharding import cache_pspecs, param_pspecs
+from repro.models.transformer import FwdOptions
+
+
+@dataclass
+class StepSetup:
+    name: str
+    jitted: Any                 # jitted fn ready for .lower(*abstract_args)
+    abstract_args: tuple        # ShapeDtypeStructs (sharding-annotated)
+    model: Model
+    cfg: ArchConfig
+
+
+def _shard_tree(mesh, tree_specs, tree_abstract):
+    """Attach NamedShardings to a ShapeDtypeStruct tree."""
+    return jax.tree.map(
+        lambda spec, a: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                             sharding=NamedSharding(mesh, spec)),
+        tree_specs, tree_abstract)
+
+
+def serving_config(cfg: ArchConfig, shape: InputShape) -> ArchConfig:
+    """long_500k runs full-attention archs with a sliding window
+    (DESIGN.md §4); SSM archs are already O(1)-state."""
+    if shape.needs_subquadratic and not cfg.rwkv and cfg.family != "ssm":
+        return cfg.with_sliding_window(LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# train: PoFEL round
+# ---------------------------------------------------------------------------
+
+def default_profile_config(profile: str, mesh, n_clusters_baseline: int = 8
+                           ) -> tuple[pt.PoFELTrainConfig, FwdOptions]:
+    """Per-profile PoFEL/forward defaults (EXPERIMENTS §Perf):
+
+    baseline — 2-D TP×FSDP params, scan-q attention, C=8 unsharded clusters
+    sp_attn  — sequence-parallel attention: attention weights FSDP-only,
+               parallel-q, explicit KV gather
+    zero3    — C=16 clusters sharded over `data`, model-axis weight storage
+               with per-layer gather, parallel-q, KV gather, expert-parallel
+               MoE buffers
+    """
+    ax = mesh_axes(mesh)
+    dp_axes = ax["dp_axes"]
+    if profile == "baseline":
+        return (pt.PoFELTrainConfig(n_clusters=n_clusters_baseline),
+                FwdOptions(seq_shard_axis="model", dp_axes=dp_axes,
+                           remat=True))
+    if profile == "sp_attn":
+        return (pt.PoFELTrainConfig(n_clusters=n_clusters_baseline),
+                FwdOptions(seq_shard_axis="model", dp_axes=dp_axes,
+                           remat=True, parallel_q=True, gather_kv=True))
+    if profile == "zero3":
+        # one BCFL cluster per device column; multi-pod: clusters span
+        # (pod × data) = 32 — each pod is an edge-server site (DESIGN §3)
+        n_c = 2 * 16 if "pod" in dp_axes else 16
+        axis = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+        return (pt.PoFELTrainConfig(n_clusters=n_c, cluster_axis=axis),
+                FwdOptions(seq_shard_axis="model", dp_axes=(),
+                           remat=True, parallel_q=True, gather_kv=True,
+                           weight_gather=True, expert_axis="model"))
+    raise ValueError(f"unknown profile {profile!r}")
+
+
+def build_train_setup(arch_id: str, mesh, shape: InputShape,
+                      tcfg: pt.PoFELTrainConfig | None = None,
+                      opts: FwdOptions | None = None,
+                      profile: str = "baseline") -> StepSetup:
+    assert shape.kind == "train"
+    cfg = get_config(arch_id)
+    model = Model(cfg)
+    ax = mesh_axes(mesh)
+    dp_axes, dp_total, tp = ax["dp_axes"], ax["dp_total"], ax["tp"]
+    d_tcfg, d_opts = default_profile_config(profile, mesh)
+    tcfg = tcfg or d_tcfg
+    opts = opts or d_opts
+    C = tcfg.n_clusters
+
+    # --- state specs ---------------------------------------------------------
+    single_specs = param_pspecs(model.abstract_params(), tp, dp_total,
+                                cfg.family, profile=profile)
+    cluster_dim = tcfg.cluster_axis  # None or "data"
+    cluster_specs = jax.tree.map(lambda sp: P(cluster_dim, *sp), single_specs)
+    abstract_state = pt.abstract_train_state(model, tcfg)
+    state_specs = pt.PoFELTrainState(
+        cluster_params=cluster_specs,
+        global_params=single_specs,
+        outer_momentum=single_specs,
+        btsv_history=P(),
+        round=P(),
+    )
+    state_arg = _shard_tree(mesh, state_specs, abstract_state)
+
+    # --- batch specs -----------------------------------------------------------
+    B, S = shape.global_batch, shape.seq_len
+    assert B % C == 0, f"global batch {B} must divide n_clusters {C}"
+    bc = B // C
+    if cluster_dim is not None:
+        bspec = P(cluster_dim, None, None)
+        ctx_spec = P(cluster_dim, None, None, None)
+    elif bc % dp_total == 0:
+        bspec = P(None, dp_axes, None)
+        ctx_spec = P(None, dp_axes, None, None)
+    else:
+        bspec = P(None, None, None)
+        ctx_spec = P()
+    batch_abstract = {
+        "tokens": jax.ShapeDtypeStruct((C, bc, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((C, bc, S), jnp.int32),
+    }
+    batch_specs = {"tokens": bspec, "labels": bspec}
+    if model.needs_context():
+        batch_abstract["context"] = jax.ShapeDtypeStruct(
+            (C, bc, cfg.n_context_tokens, cfg.d_model), jnp.bfloat16)
+        batch_specs["context"] = ctx_spec
+    batch_arg = _shard_tree(mesh, batch_specs, batch_abstract)
+    lambdas_arg = jax.ShapeDtypeStruct((C,), jnp.float32,
+                                       sharding=NamedSharding(mesh, P()))
+
+    def step(state, batch, lambdas):
+        return pt.pofel_round(model, state, batch, lambdas, tcfg, opts)
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(jax.tree.map(lambda a: a.sharding, state_arg),
+                      jax.tree.map(lambda a: a.sharding, batch_arg),
+                      lambdas_arg.sharding),
+        out_shardings=(jax.tree.map(lambda a: a.sharding, state_arg), None),
+        donate_argnums=(0,),
+    )
+    return StepSetup(f"{arch_id}/{shape.name}", jitted,
+                     (state_arg, batch_arg, lambdas_arg), model, cfg)
+
+
+def build_local_step_setup(arch_id: str, mesh, shape: InputShape,
+                           tcfg: pt.PoFELTrainConfig | None = None,
+                           opts: FwdOptions | None = None,
+                           profile: str = "baseline") -> StepSetup:
+    """Plain FEL iteration (no consensus) — baseline for consensus-overhead
+    measurement."""
+    setup = build_train_setup(arch_id, mesh, shape, tcfg, opts, profile)
+    d_tcfg, d_opts = default_profile_config(profile, mesh)
+    tcfg = tcfg or d_tcfg
+    opts = opts or d_opts
+    model = setup.model
+    state_arg, batch_arg, lambdas_arg = setup.abstract_args
+
+    def step(state, batch):
+        return pt.train_step(model, state, batch, tcfg, opts)
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(jax.tree.map(lambda a: a.sharding, state_arg),
+                      jax.tree.map(lambda a: a.sharding, batch_arg)),
+        donate_argnums=(0,),
+    )
+    return StepSetup(f"{arch_id}/{shape.name}/local", jitted,
+                     (state_arg, batch_arg), model, setup.cfg)
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+def _serving_params_arg(model: Model, mesh, tp, dp_total,
+                        profile: str = "baseline"):
+    if profile == "serve_tp":
+        # serving has no optimizer state — FSDP buys nothing and puts the
+        # data axis on contraction dims (partial-sum all-reduces). Pure
+        # Megatron TP: col/row-parallel over `model`, replicated over data.
+        specs = param_pspecs(model.abstract_params(), tp, 1,
+                             model.cfg.family, profile="baseline")
+    else:
+        specs = param_pspecs(model.abstract_params(), tp, dp_total,
+                             model.cfg.family, profile=profile)
+    return _shard_tree(mesh, specs, model.abstract_params())
+
+
+def build_prefill_setup(arch_id: str, mesh, shape: InputShape,
+                        opts: FwdOptions | None = None,
+                        profile: str = "baseline") -> StepSetup:
+    assert shape.kind == "prefill"
+    cfg = serving_config(get_config(arch_id), shape)
+    model = Model(cfg)
+    ax = mesh_axes(mesh)
+    dp_axes, dp_total, tp = ax["dp_axes"], ax["dp_total"], ax["tp"]
+    if opts is None:
+        opts = FwdOptions(seq_shard_axis="model", dp_axes=dp_axes,
+                          remat=False)
+        if profile in ("sp_attn", "zero3"):
+            # serving has no cluster dim: zero3 degenerates to per-layer
+            # weight gather with batch kept on the data axes
+            opts = opts._replace(parallel_q=True, gather_kv=True,
+                                 weight_gather=(profile == "zero3"),
+                                 expert_axis="model")
+        elif profile == "serve_tp":
+            # MoE prefill keeps the baseline expert layout: scatter-combine's
+            # token replication costs ~B·S·D/layer with no backward to
+            # amortize (EXPERIMENTS §Perf serving sweep)
+            opts = opts._replace(
+                parallel_q=True, gather_kv=True,
+                expert_axis=None if cfg.family == "moe" else "model")
+
+    B, S = shape.global_batch, shape.seq_len
+    params_arg = _serving_params_arg(model, mesh, tp, dp_total, profile)
+    bspec = P(dp_axes, None) if B % dp_total == 0 else P(None, None)
+    batch_abstract = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    batch_specs = {"tokens": bspec}
+    if model.needs_context():
+        batch_abstract["context"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_context_tokens, cfg.d_model), jnp.bfloat16)
+        batch_specs["context"] = (P(dp_axes, None, None)
+                                  if B % dp_total == 0 else P())
+    batch_arg = _shard_tree(mesh, batch_specs, batch_abstract)
+
+    def step(params, batch):
+        return model.prefill(params, batch, opts)
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(jax.tree.map(lambda a: a.sharding, params_arg),
+                      jax.tree.map(lambda a: a.sharding, batch_arg)))
+    return StepSetup(f"{arch_id}/{shape.name}", jitted,
+                     (params_arg, batch_arg), model, cfg)
+
+
+def build_decode_setup(arch_id: str, mesh, shape: InputShape,
+                       profile: str = "baseline") -> StepSetup:
+    assert shape.kind == "decode"
+    cfg = serving_config(get_config(arch_id), shape)
+    model = Model(cfg)
+    ax = mesh_axes(mesh)
+    dp_axes, dp_total, tp = ax["dp_axes"], ax["dp_total"], ax["tp"]
+
+    B, S = shape.global_batch, shape.seq_len
+    params_arg = _serving_params_arg(model, mesh, tp, dp_total, profile)
+    abstract_cache = model.abstract_cache(B, S)
+    c_specs = cache_pspecs(abstract_cache, B, dp_total, dp_axes, tp,
+                           seq_axis_shard=(B == 1),
+                           seq_shard_tp=(profile == "serve_tp"))
+    cache_arg = _shard_tree(mesh, c_specs, abstract_cache)
+    tspec = P(dp_axes, None) if B % dp_total == 0 else P(None, None)
+    tokens_arg = jax.ShapeDtypeStruct((B, 1), jnp.int32,
+                                      sharding=NamedSharding(mesh, tspec))
+    pos_arg = jax.ShapeDtypeStruct((), jnp.int32,
+                                   sharding=NamedSharding(mesh, P()))
+
+    def step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(jax.tree.map(lambda a: a.sharding, params_arg),
+                      jax.tree.map(lambda a: a.sharding, cache_arg),
+                      tokens_arg.sharding, pos_arg.sharding),
+        out_shardings=(None, jax.tree.map(lambda a: a.sharding, cache_arg)),
+        donate_argnums=(1,),
+    )
+    return StepSetup(f"{arch_id}/{shape.name}", jitted,
+                     (params_arg, cache_arg, tokens_arg, pos_arg), model, cfg)
+
+
+def build_setup(arch_id: str, shape_name: str, mesh, **kw) -> StepSetup:
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        return build_train_setup(arch_id, mesh, shape, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_setup(arch_id, mesh, shape, **kw)
+    return build_decode_setup(arch_id, mesh, shape, **kw)
+
+
+def input_specs(arch_id: str, shape_name: str, mesh, **kw) -> tuple:
+    """ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no device
+    allocation) for every input of the step lowered for (arch × shape):
+    train → (state, batch, λ); prefill → (params, batch);
+    decode → (params, cache, tokens, pos)."""
+    return build_setup(arch_id, shape_name, mesh, **kw).abstract_args

@@ -1,0 +1,117 @@
+"""PoFEL-governed training launcher.
+
+Two modes:
+* ``--reduced`` (default, runs on this CPU container): trains a REDUCED
+  variant of the selected architecture for real steps with the full PoFEL
+  round (local FedSGD per cluster → in-graph consensus → BTSV leader →
+  outer update) and the host-side blockchain (HCDS digests of consensus
+  stats + ledger append) at every round.
+* full-scale: intended for the production mesh; on this container use
+  ``python -m repro.launch.dryrun`` to validate lowering/compilation.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --steps 20
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.blockchain.block import Block
+from repro.blockchain.ledger import Ledger
+from repro.configs import ARCH_IDS, get_config
+from repro.core import crypto
+from repro.data.tokens import TokenBatchSpec, synthetic_token_batches
+from repro.fl import pofel_trainer as pt
+from repro.models.model_api import Model
+from repro.models.transformer import FwdOptions
+
+
+def append_round_block(ledger: Ledger, keypair: crypto.ECDSAKeyPair,
+                       round_: int, metrics: pt.ConsensusMetrics) -> Block:
+    """Host-side chain append: the device graph produced the consensus
+    stats; the control plane signs and records them (DESIGN.md §3)."""
+    sims = np.asarray(metrics.similarities)
+    wv = np.asarray(metrics.vote_weights)
+    adv = {int(np.argmax(sims)): float(wv.sum())}
+    block = Block(
+        index=ledger.height, round=round_, leader_id=int(metrics.leader),
+        prev_hash=ledger.head_hash,
+        model_digests={i: crypto.sha256_digest(sims[i].tobytes()).hex()
+                       for i in range(len(sims))},
+        global_model_digest=crypto.sha256_digest(sims.tobytes()).hex(),
+        votes={i: int(np.argmax(sims)) for i in range(len(sims))},
+        vote_weights={i: float(wv[i]) for i in range(len(wv))},
+        advotes=adv,
+    ).signed(keypair)
+    ledger.append(block, leader_pk=keypair.public_key)
+    return block
+
+
+def train_reduced(arch: str, steps: int, n_clusters: int, batch: int,
+                  seq: int, seed: int, outer: str) -> None:
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    tcfg = pt.PoFELTrainConfig(n_clusters=n_clusters, inner_lr=1e-2,
+                               outer=outer)
+    state = pt.init_train_state(model, tcfg, jax.random.key(seed))
+    lambdas = jnp.ones((n_clusters,), jnp.float32)
+    opts = FwdOptions(remat=False)
+
+    step_fn = jax.jit(
+        lambda s, b: pt.pofel_round(model, s, b, lambdas, tcfg, opts))
+
+    spec = TokenBatchSpec(batch, seq, cfg.vocab_size)
+    stream = synthetic_token_batches(spec, seed=seed)
+    ledger = Ledger(0)
+    keypair = crypto.ECDSAKeyPair.generate(b"launcher")
+
+    print(f"arch={arch} reduced: {cfg.n_layers}L d={cfg.d_model} "
+          f"V={cfg.vocab_size} params={model.n_params():,}")
+    for k in range(steps):
+        raw = next(stream)
+        b = {"tokens": jnp.asarray(raw["tokens"]).reshape(
+                 n_clusters, batch // n_clusters, seq),
+             "labels": jnp.asarray(raw["labels"]).reshape(
+                 n_clusters, batch // n_clusters, seq)}
+        if model.needs_context():
+            b["context"] = 0.1 * jnp.ones(
+                (n_clusters, batch // n_clusters, cfg.n_context_tokens,
+                 cfg.d_model), jnp.bfloat16)
+        t0 = time.perf_counter()
+        state, metrics = step_fn(state, b)
+        jax.block_until_ready(metrics.loss)
+        dt = time.perf_counter() - t0
+        block = append_round_block(ledger, keypair, k, metrics)
+        print(f"round {k:3d}  loss={float(jnp.mean(metrics.loss)):.4f}  "
+              f"leader={int(metrics.leader)}  "
+              f"sims=[{float(metrics.similarities.min()):.4f},"
+              f"{float(metrics.similarities.max()):.4f}]  "
+              f"chain_height={ledger.height}  {dt*1e3:.0f}ms")
+    assert ledger.verify_chain()
+    print(f"done: {steps} PoFEL rounds, chain verified at height {ledger.height}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b",
+                    choices=[a for a in ARCH_IDS if a != "mnist-mlp"])
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--clusters", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--outer", default="sgd1", choices=["sgd1", "nesterov"])
+    ap.add_argument("--reduced", action="store_true", default=True)
+    args = ap.parse_args()
+    train_reduced(args.arch, args.steps, args.clusters, args.batch, args.seq,
+                  args.seed, args.outer)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models.mlp import MLPConfig, mlp_init, mlp_apply, mlp_loss
+
+__all__ = ["MLPConfig", "mlp_init", "mlp_apply", "mlp_loss"]

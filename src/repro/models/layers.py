@@ -1,0 +1,241 @@
+"""Shared transformer building blocks (pure functional JAX).
+
+Conventions
+-----------
+* All weights are plain jnp arrays in nested dicts; a parallel tree of
+  ``PartitionSpec`` leaves is built by each architecture's ``param_pspecs``.
+* Attention weights are kept 2-D ``(d_in, n_heads*head_dim)`` so the output
+  dim is shardable by the 16-way model axis for every assigned architecture
+  (all flattened head dims are multiples of 16; head counts are not).
+* Training attention is blockwise with an online softmax (lax.scan over KV
+  blocks inside a scan over Q blocks) so the S×S score matrix is never
+  materialized — this is also the pure-jnp oracle for the Pallas
+  flash-attention kernel.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+COMPUTE_DTYPE = jnp.bfloat16
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: jax.Array, d_in: int, d_out: int,
+               dtype=jnp.float32) -> jax.Array:
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d_in, jnp.float32))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (vocab, d), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, head_dim); positions: (..., S) int32."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs       # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                             # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise attention (training / prefill) — online softmax, GQA
+# ---------------------------------------------------------------------------
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        q_block: int = 256, kv_block: int = 512,
+                        q_offset: int = 0, parallel_q: bool = False) -> jax.Array:
+    """Memory-bounded attention.
+
+    q: (B, Sq, Hq, hd); k, v: (B, Skv, Hk, hd); Hq % Hk == 0.
+    window > 0 ⇒ sliding-window attention (pos_q − pos_k < window).
+    parallel_q: process all Q blocks as a batched dim (shardable across the
+    model axis — the §Perf 'parallel-q' optimization) instead of a scan.
+    Returns (B, Sq, Hq, hd).
+    """
+    B, Sq, Hq, hd = q.shape
+    _, Skv, Hk, _ = k.shape
+    G = Hq // Hk
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Skv)
+    # pad to multiples
+    pad_q = (-Sq) % q_block
+    pad_kv = (-Skv) % kv_block
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    nq, nk = (Sq + pad_q) // q_block, (Skv + pad_kv) // kv_block
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    # (nq, B, Hk, G, qb, hd)
+    qb = q.reshape(B, nq, q_block, Hk, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    qb = (qb.astype(jnp.float32) * scale).astype(q.dtype)
+    # (nk, B, Hk, kb, hd)
+    kb = k.reshape(B, nk, kv_block, Hk, hd).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, nk, kv_block, Hk, hd).transpose(1, 0, 3, 2, 4)
+
+    q_pos_base = jnp.arange(q_block, dtype=jnp.int32) + q_offset
+    k_pos_base = jnp.arange(kv_block, dtype=jnp.int32)
+    kv_valid_len = Skv
+
+    def kv_update(carry, kj, k_j, v_j, q_i, q_pos):
+        """One online-softmax update. q_i: (..., qb, hd) with leading dims
+        (B, Hk, G) [scan mode] or (nq, B, Hk, G) [parallel mode]; q_pos
+        broadcast-compatible with the qb dim."""
+        m, l, acc = carry
+        k_pos = k_pos_base + kj * kv_block                     # (kb,)
+        if q_i.ndim == 5:   # scan mode: (B, Hk, G, qb, hd)
+            sc = jnp.einsum("bhgqd,bhkd->bhgqk", q_i, k_j,
+                            preferred_element_type=jnp.float32)
+        else:               # parallel mode: (nq, B, Hk, G, qb, hd)
+            sc = jnp.einsum("nbhgqd,bhkd->nbhgqk", q_i, k_j,
+                            preferred_element_type=jnp.float32)
+        mask = k_pos[None, :] < kv_valid_len                   # (qb?, kb)
+        if causal:
+            mask = mask & (q_pos[..., :, None] >= k_pos[None, :])
+        if window > 0:
+            mask = mask & (q_pos[..., :, None] - k_pos[None, :] < window)
+        # broadcast mask over the leading dims
+        extra = sc.ndim - mask.ndim
+        mask = mask.reshape((1,) * (extra - 0) + mask.shape) if extra else mask
+        sc = jnp.where(mask, sc, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = corr * l + jnp.sum(p, axis=-1)
+        if q_i.ndim == 5:
+            pv = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v_j.dtype), v_j,
+                            preferred_element_type=jnp.float32)
+        else:
+            pv = jnp.einsum("nbhgqk,bhkd->nbhgqd", p.astype(v_j.dtype), v_j,
+                            preferred_element_type=jnp.float32)
+        acc_new = corr[..., None] * acc + pv
+        return (m_new, l_new, acc_new)
+
+    if parallel_q:
+        # all Q blocks live as a leading (shardable) dim; scan only over KV
+        q_pos = (q_pos_base[None, :]
+                 + (jnp.arange(nq, dtype=jnp.int32) * q_block)[:, None])
+
+        def kv_step(carry, kj_and_blocks):
+            kj, k_j, v_j = kj_and_blocks
+            # q_pos needs shape (nq, 1, 1, 1, qb) against sc (nq,B,Hk,G,qb,kb)
+            qp = q_pos[:, None, None, None, :]
+            return kv_update(carry, kj, k_j, v_j, qb_all, qp), None
+
+        qb_all = qb.transpose(0, 1, 2, 3, 4, 5)       # (nq, B, Hk, G, qb, hd)
+        m0 = jnp.full((nq, B, Hk, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((nq, B, Hk, G, q_block), jnp.float32)
+        a0 = jnp.zeros((nq, B, Hk, G, q_block, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kb, vb))
+        outs = acc / jnp.maximum(l, 1e-30)[..., None]
+        outs = outs.astype(q.dtype)
+    else:
+        def q_step(_, qi_and_block):
+            qi, q_i = qi_and_block
+            q_pos = q_pos_base + qi * q_block                 # (qb,)
+
+            def kv_step(carry, kj_and_blocks):
+                kj, k_j, v_j = kj_and_blocks
+                return kv_update(carry, kj, k_j, v_j, q_i, q_pos), None
+
+            m0 = jnp.full((B, Hk, G, q_block), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((B, Hk, G, q_block), jnp.float32)
+            a0 = jnp.zeros((B, Hk, G, q_block, hd), jnp.float32)
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0), (jnp.arange(nk), kb, vb))
+            out = acc / jnp.maximum(l, 1e-30)[..., None]
+            return None, out.astype(q.dtype)
+
+        _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
+    # outs: (nq, B, Hk, G, qb, hd) -> (B, S, Hq, hd)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq + pad_q, Hq, hd)
+    return out[:, :Sq]
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, *, window: int = 0) -> jax.Array:
+    """Single-token decode attention over a (B, S, Hk, hd) KV cache.
+
+    q: (B, 1, Hq, hd); pos: () int32 — index of the current token.
+    Returns (B, 1, Hq, hd).
+    """
+    B, S, Hk, hd = k_cache.shape
+    Hq = q.shape[2]
+    G = Hq // Hk
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    qg = (q.reshape(B, Hk, G, hd).astype(jnp.float32) * scale).astype(q.dtype)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                   preferred_element_type=jnp.float32)          # (B,Hk,G,S)
+    idx = jnp.arange(S, dtype=jnp.int32)
+    mask = idx[None, None, None, :] <= pos
+    if window > 0:
+        mask = mask & (pos - idx[None, None, None, :] < window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, Hq, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_mlp(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+               w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate.astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, w_up.astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down.astype(x.dtype))
+
+
+def gelu_mlp(x: jax.Array, w_up: jax.Array, w_down: jax.Array,
+             b_up: Optional[jax.Array] = None,
+             b_down: Optional[jax.Array] = None) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, w_up.astype(x.dtype))
+    if b_up is not None:
+        h = h + b_up.astype(h.dtype)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("...f,fd->...d", h, w_down.astype(x.dtype))
+    if b_down is not None:
+        out = out + b_down.astype(out.dtype)
+    return out

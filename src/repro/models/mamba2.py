@@ -1,0 +1,152 @@
+"""Mamba-2 (SSD) block for the Zamba2 hybrid (arXiv:2411.15242 backbone,
+SSD recurrence from Dao & Gu 2024).
+
+  u = in_proj(x) → [z (gate), xc, B, C, dt]
+  xc, B, C pass through a short causal depthwise conv (kernel 4)
+  a_t = exp(−softplus(dt_t + dt_bias) · exp(A_log))      per-head scalar decay
+  S_t = a_t S_{t−1} + (dt_t x_t) ⊗ B_t                    state (P × N) per head
+  y_t = S_t C_t + D ⊙ x_t
+  out = out_proj(y ⊙ SiLU(z))
+
+Implemented as ``lax.scan`` over time: O(S) compute, O(1) state — the SSM
+half of why zamba2 runs `long_500k` natively.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+class Mamba2Config(NamedTuple):
+    d_model: int
+    d_state: int = 64
+    expand: int = 2
+    head_dim: int = 64
+    conv_kernel: int = 4
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def mamba2_init(cfg: Mamba2Config, key: jax.Array) -> dict:
+    D, DI, N, H = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    ks = jax.random.split(key, 4)
+    # in_proj packs [z, xc, B, C, dt]
+    d_in_proj = 2 * DI + 2 * N + H
+    return {
+        "norm": jnp.ones((D,), jnp.float32),
+        "in_proj": dense_init(ks[0], D, d_in_proj),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_kernel, DI + 2 * N),
+                                     jnp.float32) * 0.1),
+        "conv_b": jnp.zeros((DI + 2 * N,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "out_proj": dense_init(ks[2], DI, D),
+    }
+
+
+class Mamba2State(NamedTuple):
+    ssm: jax.Array    # (B, H, P, N)
+    conv: jax.Array   # (B, K-1, DI + 2N) — trailing conv inputs
+
+
+def mamba2_init_state(cfg: Mamba2Config, batch: int) -> Mamba2State:
+    return Mamba2State(
+        jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state), jnp.float32),
+        jnp.zeros((batch, cfg.conv_kernel - 1, cfg.d_inner + 2 * cfg.d_state),
+                  jnp.float32))
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array,
+                 prefix: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over (B, S, C); returns (out, new trailing state)."""
+    K = w.shape[0]
+    if prefix is None:
+        prefix = jnp.zeros((u.shape[0], K - 1, u.shape[2]), u.dtype)
+    up = jnp.concatenate([prefix.astype(u.dtype), u], axis=1)   # (B, S+K-1, C)
+    out = jnp.zeros_like(u)
+    for i in range(K):  # tiny static unroll (K = 4)
+        out = out + up[:, i:i + u.shape[1]] * w[i].astype(u.dtype)
+    out = jax.nn.silu((out + b.astype(u.dtype)).astype(jnp.float32)).astype(u.dtype)
+    return out, up[:, -(K - 1):]
+
+
+def mamba2_apply(params: dict, x: jax.Array, cfg: Mamba2Config,
+                 state: Mamba2State | None = None,
+                 sharded: bool = False) -> tuple[jax.Array, Mamba2State]:
+    """x: (B, S, D) → (out, new_state). Residual is the caller's job.
+
+    sharded=True (distributed meshes): pins the small B_t/C_t SSD inputs
+    replicated. They are sliced out of the packed in_proj output whose
+    model-axis sharding crosses the slice boundaries; without the pin the
+    (B,H,P,N) state update inherits conflicting shardings and GSPMD emits
+    per-TIMESTEP collective-permutes — 4.46M of them at prefill_32k
+    (EXPERIMENTS §Perf zamba2 iter 2)."""
+    from repro.models.layers import rms_norm
+    B, S, D = x.shape
+    DI, N, H, P = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+
+    h = rms_norm(x, params["norm"])
+    u = jnp.einsum("bsd,de->bse", h, params["in_proj"].astype(h.dtype))
+    z, rest = jnp.split(u, [DI], axis=-1)
+    conv_in, dt_raw = jnp.split(rest, [DI + 2 * N], axis=-1)     # (B,S,DI+2N),(B,S,H)
+
+    conv_out, new_conv = _causal_conv(
+        conv_in, params["conv_w"], params["conv_b"],
+        None if state is None else state.conv)
+    xc, Bmat, Cmat = jnp.split(conv_out, [DI, DI + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    a = jnp.exp(-dt * jnp.exp(params["A_log"].astype(jnp.float32)))  # (B,S,H)
+
+    xh = xc.reshape(B, S, H, P).astype(jnp.float32)
+    dtx = xh * dt[..., None]                                     # (B,S,H,P)
+
+    if state is None:
+        ssm0 = jnp.zeros((B, H, P, N), jnp.float32)
+    else:
+        ssm0 = state.ssm
+
+    Bf = Bmat.astype(jnp.float32)                                # (B,S,N)
+    Cf = Cmat.astype(jnp.float32)
+    if sharded:
+        from jax.sharding import PartitionSpec as P
+        rep = P(None, None, None)
+        Bf = jax.lax.with_sharding_constraint(Bf, rep)
+        Cf = jax.lax.with_sharding_constraint(Cf, rep)
+        # keep the heavy per-step tensors consistently head-sharded
+        hs = P(None, None, "model", None)
+        dtx = jax.lax.with_sharding_constraint(dtx, hs)
+
+    def step(S_prev, inputs):
+        a_t, dtx_t, B_t, C_t = inputs          # (B,H),(B,H,P),(B,N),(B,N)
+        S_new = a_t[..., None, None] * S_prev + jnp.einsum(
+            "bhp,bn->bhpn", dtx_t, B_t)
+        y_t = jnp.einsum("bhpn,bn->bhp", S_new, C_t)
+        return S_new, y_t
+
+    xs = (a.transpose(1, 0, 2), dtx.transpose(1, 0, 2, 3),
+          Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2))
+    ssm_final, ys = jax.lax.scan(step, ssm0, xs)
+    # cast out of the f32 scan accumulator immediately — keeping the
+    # (B,S,H,P) stream f32 doubles the per-layer resharding traffic
+    # (EXPERIMENTS §Perf zamba2 iter 4)
+    y = ys.transpose(1, 0, 2, 3)                                 # (B,S,H,P)
+    y = (y + params["D"].astype(jnp.float32)[None, None, :, None] * xh
+         ).astype(x.dtype)
+    y = y.reshape(B, S, DI)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(y.dtype))
+    return out, Mamba2State(ssm_final, new_conv)

@@ -1,0 +1,148 @@
+"""Family-dispatched model API: init / forward / loss / prefill / decode.
+
+This is the single entry point the launcher, smoke tests, and examples use:
+
+    from repro.models.model_api import Model
+    model = Model(cfg)
+    params = model.init(key)
+    loss = model.loss(params, batch)
+    logits, cache = model.prefill(params, batch)
+    logits, cache = model.decode_step(params, cache, tokens, pos)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm_models, transformer
+from repro.models.config import ArchConfig
+from repro.models.layers import COMPUTE_DTYPE
+from repro.models.transformer import FwdOptions
+
+
+def _token_ce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Cross entropy over (B, S, V) logits with V possibly sharded over the
+    model axis: logsumexp + masked-iota reduction (no one-hot matmul, no
+    gather along the sharded vocab dim — both reductions partition cleanly
+    under GSPMD)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    V = logits.shape[-1]
+    vidx = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    mask = vidx == labels[..., None].astype(jnp.int32)
+    gold = jnp.sum(jnp.where(mask, logits, 0.0), axis=-1)
+    return jnp.mean(lse - gold)
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # -- params -------------------------------------------------------------
+    def init(self, key: jax.Array) -> dict:
+        if self.cfg.rwkv:
+            return ssm_models.rwkv_init_params(self.cfg, key)
+        if self.cfg.family == "hybrid":
+            return ssm_models.hybrid_init_params(self.cfg, key)
+        return transformer.init_params(self.cfg, key)
+
+    def abstract_params(self) -> Any:
+        return jax.eval_shape(lambda: self.init(jax.random.key(0)))
+
+    # -- context stub (vlm/audio frontend carve-out) -------------------------
+    def needs_context(self) -> bool:
+        return self.cfg.family in ("vlm", "audio")
+
+    def context_shape(self, batch: int) -> tuple:
+        return (batch, self.cfg.n_context_tokens, self.cfg.d_model)
+
+    # -- forward / loss -------------------------------------------------------
+    def forward(self, params: dict, batch: dict,
+                opts: FwdOptions = FwdOptions()) -> tuple[jax.Array, jax.Array]:
+        tokens = batch["tokens"]
+        if self.cfg.rwkv:
+            return ssm_models.rwkv_forward(params, tokens, self.cfg,
+                                           remat=opts.remat), jnp.zeros(())
+        if self.cfg.family == "hybrid":
+            return ssm_models.hybrid_forward(
+                params, tokens, self.cfg, remat=opts.remat,
+                sharded=opts.seq_shard_axis is not None), jnp.zeros(())
+        ctx = batch.get("context")
+        if ctx is not None:
+            ctx = ctx.astype(COMPUTE_DTYPE)
+        return transformer.forward(params, tokens, self.cfg, context=ctx,
+                                   opts=opts)
+
+    def loss(self, params: dict, batch: dict,
+             opts: FwdOptions = FwdOptions(),
+             aux_weight: float = 0.01) -> jax.Array:
+        logits, aux = self.forward(params, batch, opts)
+        return _token_ce_loss(logits, batch["labels"]) + aux_weight * aux
+
+    # -- serving --------------------------------------------------------------
+    def init_cache(self, batch: int, seq_len: int) -> Any:
+        if self.cfg.rwkv:
+            return ssm_models.rwkv_init_caches(self.cfg, batch)
+        if self.cfg.family == "hybrid":
+            return ssm_models.hybrid_init_cache(self.cfg, batch, seq_len)
+        return transformer.init_cache(self.cfg, batch, seq_len)
+
+    def abstract_cache(self, batch: int, seq_len: int) -> Any:
+        return jax.eval_shape(lambda: self.init_cache(batch, seq_len))
+
+    def prefill(self, params: dict, batch: dict,
+                opts: FwdOptions = FwdOptions(remat=False)):
+        tokens = batch["tokens"]
+        if self.cfg.rwkv or self.cfg.family == "hybrid":
+            # recurrent prefill: run forward for logits; caches built by
+            # scanning decode over the prompt is the runtime's job — for the
+            # dry-run the decode shapes are what matter.
+            logits, _ = self.forward(params, batch, opts)
+            cache = self.init_cache(tokens.shape[0], tokens.shape[1])
+            return logits[:, -1:], cache
+        ctx = batch.get("context")
+        if ctx is not None:
+            ctx = ctx.astype(COMPUTE_DTYPE)
+        return transformer.prefill(params, tokens, self.cfg, context=ctx,
+                                   opts=opts)
+
+    def decode_step(self, params: dict, cache: Any, tokens: jax.Array,
+                    pos: jax.Array):
+        if self.cfg.rwkv:
+            return ssm_models.rwkv_decode_step(params, cache, tokens, pos,
+                                               self.cfg)
+        if self.cfg.family == "hybrid":
+            return ssm_models.hybrid_decode_step(params, cache, tokens, pos,
+                                                 self.cfg)
+        return transformer.decode_step(params, cache, tokens, pos, self.cfg)
+
+    # -- sharding --------------------------------------------------------------
+    def param_pspecs(self, tp: int, fsdp: int):
+        from repro.models.sharding import param_pspecs
+        return param_pspecs(self.abstract_params(), tp, fsdp, self.cfg.family)
+
+    def n_params(self) -> int:
+        import math
+        return sum(math.prod(l.shape) for l in
+                   jax.tree.leaves(self.abstract_params()))
+
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE: routed experts count k of E)."""
+        cfg = self.cfg
+        if not cfg.n_experts:
+            return self.n_params()
+        total = 0
+        for kp, leaf in jax.tree_util.tree_flatten_with_path(
+                self.abstract_params())[0]:
+            path = jax.tree_util.keystr(kp)
+            size = 1
+            for s in leaf.shape:
+                size *= int(s)
+            if "moe" in path and "'shared'" not in path and "router" not in path:
+                size = size * cfg.experts_per_token // cfg.n_experts
+            total += size
+        return total

@@ -1,0 +1,158 @@
+"""Mixture-of-Experts FFN with top-k routing (GShard/Switch-style capacity
+dispatch adapted for TPU: sort-based position-in-expert computation — no
+(T, E) one-hot cumsum — and scatter/gather dispatch so the only large
+intermediate is the (E, C, D) expert buffer, which is sharded over the
+`model` mesh axis (expert parallelism).
+
+Supports DeepSeek-MoE-style fine-grained experts with shared experts
+(always-on) and Phi-3.5-MoE-style classic top-2.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import swiglu_mlp
+
+
+class MoEConfig(NamedTuple):
+    n_experts: int
+    experts_per_token: int
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+
+
+def router_topk(x: jax.Array, w_router: jax.Array, cfg: MoEConfig
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (gates (T,k), expert_idx (T,k), router_probs (T,E)).
+
+    Gate weights are softmax-renormalized over the selected k experts
+    (DeepSeek-MoE / Mixtral convention).
+    """
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        w_router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    return gates, idx.astype(jnp.int32), probs
+
+
+def position_in_expert(expert_idx: jax.Array, n_experts: int) -> jax.Array:
+    """Rank of each (token, k) assignment among all assignments to the same
+    expert, computed by stable sort instead of a (T*k, E) one-hot cumsum.
+
+    expert_idx: (T, k) → positions (T, k) int32.
+    """
+    flat = expert_idx.reshape(-1)                                # (T*k,)
+    n = flat.shape[0]
+    order = jnp.argsort(flat, stable=True)                      # group by expert
+    sorted_e = flat[order]
+    # start index of each expert's group via searchsorted
+    starts = jnp.searchsorted(sorted_e, jnp.arange(n_experts, dtype=flat.dtype))
+    rank_sorted = jnp.arange(n, dtype=jnp.int32) - starts[sorted_e]
+    pos = jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted)
+    return pos.reshape(expert_idx.shape)
+
+
+def moe_ffn(x: jax.Array, params: dict, cfg: MoEConfig,
+            expert_sharding: Optional[jax.sharding.NamedSharding] = None,
+            combine: str = "gather") -> tuple[jax.Array, jax.Array]:
+    """Apply the MoE FFN to (T, D) tokens.
+
+    params: {"router": (D, E), "w_gate"/"w_up": (E, D, Fe), "w_down": (E, Fe, D),
+             optional "shared": {"w_gate","w_up","w_down"} always-on experts}
+
+    combine: 'gather' — rows gathered back by slot index (simple; GSPMD may
+    lower gathers along the sharded expert dim poorly); 'scatter' — tokens
+    are replicated into dispatch, each expert shard scatters its own rows'
+    contributions into a partial (T, D) output that reduces across the
+    expert axis (partial-sum friendly; the §Perf expert-parallel variant).
+
+    Returns (output (T, D), aux_loss ()) — aux_loss is the load-balance loss
+    (Switch: E * Σ_e f_e · p̄_e).
+    """
+    import math
+    T, D = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    C = max(int(math.ceil(T * k / E * cfg.capacity_factor)), k)
+
+    if combine == "scatter" and expert_sharding is not None:
+        # replicate tokens so dispatch scatters are local per expert shard
+        x = jax.lax.with_sharding_constraint(
+            x, jax.sharding.PartitionSpec(None, None))
+
+    gates, idx, probs = router_topk(x, params["router"], cfg)
+    pos = position_in_expert(idx, E)                             # (T, k)
+    within = (pos < C).astype(gates.dtype)
+    gates = gates * within                                      # drop overflow
+
+    # ---- dispatch --------------------------------------------------------
+    # overflow assignments (pos ≥ C) go to a trash row E*C, never colliding
+    # with a valid slot
+    slot = jnp.where(pos < C, idx * C + jnp.minimum(pos, C - 1),
+                     E * C).reshape(-1)                          # (T*k,)
+    tok_ids = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)       # (T*k,)
+    if combine == "scatter":
+        # expert-parallel mode: build the slot→token index map with tiny
+        # integer scatters, then GATHER token vectors per slot. With x
+        # replicated and indices replicated the gather is local per expert
+        # shard, and its backward merges at (T, D) — not (T·k, D) — cutting
+        # the dispatch-backward all-reduce 6× (EXPERIMENTS §Perf iter 6).
+        tok_of_slot = jnp.zeros((E * C + 1,), jnp.int32
+                                ).at[slot].set(tok_ids)[:E * C]
+        occ_of_slot = jnp.zeros((E * C + 1,), jnp.float32
+                                ).at[slot].set(within.reshape(-1))[:E * C]
+        buf = x[tok_of_slot] * occ_of_slot[:, None].astype(x.dtype)
+    else:
+        upd = jnp.repeat(x, k, axis=0) * within.reshape(-1, 1).astype(x.dtype)
+        buf = jnp.zeros((E * C + 1, D), x.dtype).at[slot].add(upd)[:E * C]
+    buf = buf.reshape(E, C, D)
+    if expert_sharding is not None:
+        buf = jax.lax.with_sharding_constraint(buf, expert_sharding)
+
+    # ---- expert computation (batched over E) ------------------------------
+    g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(buf.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(buf.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(buf.dtype) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(buf.dtype))
+    if expert_sharding is not None:
+        out_buf = jax.lax.with_sharding_constraint(out_buf, expert_sharding)
+
+    if combine == "scatter":
+        # combine: each expert shard scatters its rows' gated contributions
+        # into a (T, D) partial that reduces across the expert axis
+        gate_of_slot = jnp.zeros((E * C + 1,), jnp.float32).at[slot].set(
+            gates.reshape(-1))[:E * C]
+        rows = out_buf.reshape(E * C, D).astype(jnp.float32)
+        out = jnp.zeros((T, D), jnp.float32).at[tok_of_slot].add(
+            gate_of_slot[:, None] * rows)
+        out = out.astype(x.dtype)
+        if expert_sharding is not None:
+            # pin the combined output REPLICATED: each expert shard's partial
+            # reduces here (one (T,D) all-reduce) and — critically — the
+            # backward cotangent arrives replicated, so the transpose-gather
+            # of the scatter-add stays local instead of all-reducing the
+            # full (E·C, D) row cotangent (90 GB/step on deepseek-moe —
+            # EXPERIMENTS §Perf iter 6)
+            out = jax.lax.with_sharding_constraint(
+                out, jax.sharding.PartitionSpec(None, None))
+    else:
+        picked = jnp.concatenate(
+            [out_buf.reshape(E * C, D),
+             jnp.zeros((1, D), out_buf.dtype)])[slot]            # (T*k, D)
+        picked = picked.reshape(T, k, D) * gates[..., None].astype(picked.dtype)
+        out = jnp.sum(picked, axis=1)
+
+    # ---- always-on shared experts (DeepSeek-MoE) ---------------------------
+    if "shared" in params:
+        sh = params["shared"]
+        out = out + swiglu_mlp(x, sh["w_gate"], sh["w_up"], sh["w_down"])
+
+    # ---- load-balance aux loss (Switch Transformer Eq. 4) ------------------
+    f = jnp.mean(jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32), axis=0)
+    p_bar = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f * p_bar)
+    return out, aux

@@ -1,0 +1,199 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892) — attention-free time mixing
+with data-dependent decay, plus squared-ReLU channel mixing.
+
+Faithful structure (head-wise matrix-valued state, data-dependent per-channel
+decay via low-rank adapters, bonus `u` for the current token):
+
+  lerp_□(x_t) = x_t + (x_{t-1} − x_t) ⊙ μ_□            (token shift)
+  w_t = exp(−exp(w0 + tanh(lerp_w x · A_w) B_w))        (data-dependent decay)
+  r_t, k_t, v_t, g_t = W_□ · lerp_□(x)
+  S_t = diag(w_t) S_{t−1} + k_tᵀ v_t                    (per head, K×V state)
+  o_t = r_t · (S_{t−1} + diag(u) k_tᵀ v_t)
+  out = W_o · (GroupNorm(o) ⊙ SiLU(g))
+
+The recurrence runs as ``lax.scan`` over time — O(S) compute, O(1) state —
+which is what makes rwkv6 run `long_500k` natively (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+class RWKVConfig(NamedTuple):
+    d_model: int
+    head_size: int = 64
+    d_ff: int = 0            # channel-mix hidden; 3.5x d_model if 0
+    decay_lora: int = 64
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_size
+
+    @property
+    def ffn_dim(self) -> int:
+        return self.d_ff or int(3.5 * self.d_model)
+
+
+def rwkv_block_init(cfg: RWKVConfig, key: jax.Array) -> dict:
+    D, H, K = cfg.d_model, cfg.n_heads, cfg.head_size
+    ks = jax.random.split(key, 12)
+    return {
+        "norm1": jnp.ones((D,), jnp.float32),
+        "norm2": jnp.ones((D,), jnp.float32),
+        "mu": 0.5 * jnp.ones((5, D), jnp.float32),     # r,k,v,g,w token-shift mixes
+        "w0": -6.0 * jnp.ones((D,), jnp.float32),
+        "w_lora_a": dense_init(ks[0], D, cfg.decay_lora) * 0.1,
+        "w_lora_b": dense_init(ks[1], cfg.decay_lora, D) * 0.1,
+        "u": jnp.zeros((H, K), jnp.float32),           # current-token bonus
+        "wr": dense_init(ks[2], D, D),
+        "wk": dense_init(ks[3], D, D),
+        "wv": dense_init(ks[4], D, D),
+        "wg": dense_init(ks[5], D, D),
+        "wo": dense_init(ks[6], D, D),
+        "ln_x": jnp.ones((D,), jnp.float32),           # per-head group norm scale
+        # channel mixing
+        "mu_ffn": 0.5 * jnp.ones((2, D), jnp.float32),
+        "wk_ffn": dense_init(ks[7], D, cfg.ffn_dim),
+        "wv_ffn": dense_init(ks[8], cfg.ffn_dim, D),
+        "wr_ffn": dense_init(ks[9], D, D),
+    }
+
+
+def _group_norm(x: jax.Array, scale: jax.Array, n_heads: int,
+                eps: float = 64e-5) -> jax.Array:
+    """Per-head layer norm over the head channel (RWKV's ln_x)."""
+    B, S, D = x.shape
+    xh = x.reshape(B, S, n_heads, D // n_heads).astype(jnp.float32)
+    mean = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    xh = (xh - mean) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(B, S, D) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _token_shift(x: jax.Array, x_prev_last: jax.Array | None = None) -> jax.Array:
+    """(B, S, D) → previous-token tensor; x_prev_last seeds position 0."""
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if x_prev_last is not None:
+        shifted = shifted.at[:, 0].set(x_prev_last.astype(x.dtype))
+    return shifted
+
+
+def _time_mix_inputs(params: dict, x: jax.Array, shifted: jax.Array, cfg: RWKVConfig):
+    mu = params["mu"].astype(x.dtype)                    # (5, D)
+    lerp = x[None] + (shifted - x)[None] * mu[:, None, None, :]   # (5,B,S,D)
+    xr, xk, xv, xg, xw = lerp
+    r = jnp.einsum("bsd,de->bse", xr, params["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", xk, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", xv, params["wv"].astype(x.dtype))
+    g = jnp.einsum("bsd,de->bse", xg, params["wg"].astype(x.dtype))
+    # data-dependent decay (the Finch contribution)
+    dd = jnp.tanh(jnp.einsum("bsd,dl->bsl", xw.astype(jnp.float32),
+                             params["w_lora_a"]))
+    dd = jnp.einsum("bsl,ld->bsd", dd, params["w_lora_b"])
+    w = jnp.exp(-jnp.exp(params["w0"].astype(jnp.float32) + dd))  # (B,S,D) in (0,1)
+    return r, k, v, g, w
+
+
+def rwkv_time_mix(params: dict, x: jax.Array, cfg: RWKVConfig,
+                  state: jax.Array | None = None,
+                  shift_state: jax.Array | None = None,
+                  use_pallas: bool = False,
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Run the WKV6 recurrence over (B, S, D).
+
+    state: (B, H, K, V) carry; shift_state: (B, D) last token of prev chunk.
+    use_pallas: run the VMEM-resident kernel (repro.kernels.wkv6) instead of
+    the lax.scan reference — identical numerics (tests/test_kernels_wkv6).
+    Returns (out, new_state, new_shift_state).
+    """
+    B, S, D = x.shape
+    H, K = cfg.n_heads, cfg.head_size
+    shifted = _token_shift(x, shift_state)
+    r, k, v, g, w = _time_mix_inputs(params, x, shifted, cfg)
+
+    rh = r.reshape(B, S, H, K).astype(jnp.float32)
+    kh = k.reshape(B, S, H, K).astype(jnp.float32)
+    vh = v.reshape(B, S, H, K).astype(jnp.float32)
+    wh = w.reshape(B, S, H, K)
+    u = params["u"].astype(jnp.float32)                  # (H, K)
+
+    if state is None:
+        state = jnp.zeros((B, H, K, K), jnp.float32)
+
+    if use_pallas:
+        from repro.kernels.ops import wkv6_recurrence
+        outs_bshk, new_state = wkv6_recurrence(rh, kh, vh, wh, u, state)
+        o = outs_bshk.reshape(B, S, D).astype(x.dtype)
+        o = _group_norm(o, params["ln_x"], H)
+        o = o * jax.nn.silu(g.astype(jnp.float32)).astype(o.dtype)
+        out = jnp.einsum("bsd,de->bse", o, params["wo"].astype(o.dtype))
+        return out, new_state, x[:, -1]
+
+    def step(S_prev, inputs):
+        r_t, k_t, v_t, w_t = inputs                      # (B,H,K) each
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        o_t = jnp.einsum("bhk,bhkv->bhv", r_t, S_prev + u[None, :, :, None] * kv)
+        S_new = w_t[..., None] * S_prev + kv
+        return S_new, o_t
+
+    xs = (rh.transpose(1, 0, 2, 3), kh.transpose(1, 0, 2, 3),
+          vh.transpose(1, 0, 2, 3), wh.transpose(1, 0, 2, 3))
+    new_state, outs = jax.lax.scan(step, state, xs)
+    o = outs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+    o = _group_norm(o, params["ln_x"], H)
+    o = o * jax.nn.silu(g.astype(jnp.float32)).astype(o.dtype)
+    out = jnp.einsum("bsd,de->bse", o, params["wo"].astype(o.dtype))
+    return out, new_state, x[:, -1]
+
+
+def rwkv_channel_mix(params: dict, x: jax.Array, cfg: RWKVConfig,
+                     shift_state: jax.Array | None = None,
+                     ) -> tuple[jax.Array, jax.Array]:
+    shifted = _token_shift(x, shift_state)
+    mu = params["mu_ffn"].astype(x.dtype)
+    xk = x + (shifted - x) * mu[0]
+    xr = x + (shifted - x) * mu[1]
+    kk = jnp.einsum("bsd,df->bsf", xk, params["wk_ffn"].astype(x.dtype))
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    vv = jnp.einsum("bsf,fd->bsd", kk, params["wv_ffn"].astype(x.dtype))
+    rr = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", xr, params["wr_ffn"].astype(x.dtype)
+                   ).astype(jnp.float32)).astype(x.dtype)
+    return rr * vv, x[:, -1]
+
+
+class RWKVBlockState(NamedTuple):
+    wkv: jax.Array          # (B, H, K, K)
+    shift_tm: jax.Array     # (B, D)
+    shift_cm: jax.Array     # (B, D)
+
+
+def rwkv_block_apply(params: dict, x: jax.Array, cfg: RWKVConfig,
+                     state: RWKVBlockState | None = None,
+                     ) -> tuple[jax.Array, RWKVBlockState]:
+    from repro.models.layers import rms_norm
+    h = rms_norm(x, params["norm1"])
+    tm, wkv, sh_tm = rwkv_time_mix(
+        params, h, cfg,
+        state=None if state is None else state.wkv,
+        shift_state=None if state is None else state.shift_tm)
+    x = x + tm
+    h = rms_norm(x, params["norm2"])
+    cm, sh_cm = rwkv_channel_mix(
+        params, h, cfg,
+        shift_state=None if state is None else state.shift_cm)
+    x = x + cm
+    return x, RWKVBlockState(wkv, sh_tm, sh_cm)
+
+
+def rwkv_init_state(cfg: RWKVConfig, batch: int) -> RWKVBlockState:
+    return RWKVBlockState(
+        jnp.zeros((batch, cfg.n_heads, cfg.head_size, cfg.head_size), jnp.float32),
+        jnp.zeros((batch, cfg.d_model), jnp.float32),
+        jnp.zeros((batch, cfg.d_model), jnp.float32))

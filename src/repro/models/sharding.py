@@ -1,0 +1,175 @@
+"""Parameter / activation PartitionSpec derivation.
+
+2-D sharding strategy (DESIGN.md §6):
+  * `model` axis (TP, 16-way): column-parallel up-projections (output dim),
+    row-parallel down-projections (input dim), expert axis for MoE stacks,
+    vocab axis for embed/lm_head.
+  * `data` axis (FSDP, 16-way): the complementary large dim of each weight.
+  * `pod` axis: pure data parallelism — params replicated, batch sharded.
+
+Rules are name+shape based and skip any dim not exactly divisible by the
+axis size, so every assigned architecture lowers with even shards.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# leading stacked-layer dims to leave unsharded, by path substring
+_STACK_DEPTH = (
+    ("mamba_groups", 2),
+    ("mamba_tail", 1),
+    ("cross_layers", 1),
+    ("layers", 1),      # dense/moe/audio/rwkv stacks (vlm handled below)
+)
+
+# weights whose INPUT dim is model-sharded (row-parallel)
+_ROW_PARALLEL = {"w_down", "wo", "wv_ffn", "out_proj", "w_lora_b"}
+_REPLICATE = {"router", "gate_attn", "gate_mlp"}
+
+
+def _stack_dims(path: str, vlm: bool) -> int:
+    for key, depth in _STACK_DEPTH:
+        if key in path:
+            if vlm and key == "layers" and "cross_layers" not in path:
+                return 2            # vlm self-layers are (n_groups, spg, ...)
+            return depth
+    return 0
+
+
+# attention projection weights (incl. cross/shared attention)
+_ATTN_NAMES = {"wq", "wk", "wv", "wo", "bq", "bk", "bv"}
+
+
+def _leaf_spec(path: str, shape: tuple, tp: int, fsdp: int, vlm: bool,
+               tp_axis: str = "model", fsdp_axis: str = "data",
+               profile: str = "baseline") -> P:
+    name = path.rsplit("'")[-2] if "'" in path else path
+    strip = _stack_dims(path, vlm)
+    spec: list = [None] * len(shape)
+    dims = list(range(strip, len(shape)))
+    if not dims or any(n in path for n in _REPLICATE):
+        return P(*spec) if spec else P()
+    if len(dims) == 1:
+        return P(*spec)   # vectors: replicate
+
+    is_expert = ("moe" in path and len(dims) == 3)
+    if is_expert:
+        e_dim = dims[0]
+        if shape[e_dim] % tp == 0:
+            spec[e_dim] = tp_axis
+        rest = [d for d in dims[1:] if fsdp > 1 and shape[d] % fsdp == 0]
+        if rest and profile != "zero3":
+            big = max(rest, key=lambda d: shape[d])
+            spec[big] = fsdp_axis
+        return P(*spec)
+
+    if profile == "sp_attn" and (name in _ATTN_NAMES
+                                 or "shared_attn" in path):
+        # attention runs sequence-parallel: weights keep FSDP only, no TP —
+        # removes the sharded-contraction all-reduces inside attention.
+        # For the zamba2 hybrid this covers the whole shared block (its MLP
+        # partial-sum all-reduces dominate prefill — EXPERIMENTS §Perf)
+        ddim = max(dims, key=lambda d: shape[d])
+        if fsdp > 1 and shape[ddim] % fsdp == 0:
+            spec[ddim] = fsdp_axis
+        return P(*spec)
+
+    if profile == "zero3":
+        # storage: model axis on the largest divisible dim; the data axis is
+        # consumed by the cluster dim (cluster_pspec) — compute gathers
+        # per layer via FwdOptions.weight_gather
+        cands = [d for d in dims if shape[d] % tp == 0]
+        if cands:
+            spec[max(cands, key=lambda d: shape[d])] = tp_axis
+        return P(*spec)
+
+    if name in _ROW_PARALLEL:
+        mdim, ddim = dims[-2], dims[-1]
+    else:
+        mdim, ddim = dims[-1], dims[-2]
+    if tp > 1 and shape[mdim] % tp == 0:
+        spec[mdim] = tp_axis
+    if fsdp > 1 and shape[ddim] % fsdp == 0:
+        spec[ddim] = fsdp_axis
+    return P(*spec)
+
+
+def param_pspecs(abstract: Any, tp: int, fsdp: int, family: str,
+                 tp_axis: str = "model", fsdp_axis: str = "data",
+                 profile: str = "baseline") -> Any:
+    """Build a PartitionSpec tree matching ``abstract`` (ShapeDtypeStructs).
+
+    profile: 'baseline' (2-D TP×FSDP), 'sp_attn' (attention weights
+    FSDP-only — sequence-parallel attention), 'zero3' (model-axis storage,
+    per-layer gather; cluster dim carries the data axis).
+    """
+    vlm = family == "vlm"
+    flat = jax.tree_util.tree_flatten_with_path(abstract)
+    specs = []
+    for kp, leaf in flat[0]:
+        path = jax.tree_util.keystr(kp)
+        specs.append(_leaf_spec(path, leaf.shape, tp, fsdp, vlm,
+                                tp_axis, fsdp_axis, profile))
+    return jax.tree_util.tree_unflatten(flat[1], specs)
+
+
+def batch_pspec(batch_size: int, dp_total: int, dp_axes: tuple,
+                rank: int = 2) -> P:
+    """Shard batch dim over data axes when divisible, else replicate."""
+    if batch_size % dp_total == 0:
+        return P(dp_axes) if rank == 1 else P(dp_axes, *([None] * (rank - 1)))
+    return P(*([None] * rank))
+
+
+def cache_pspecs(abstract_cache: Any, batch: int, dp_total: int,
+                 dp_axes: tuple, tp: int, seq_axis_shard: bool,
+                 tp_axis: str = "model", seq_shard_tp: bool = False) -> Any:
+    """KV/state cache specs.
+
+    batch divisible → shard batch dim (dim 1 after the layer-stack dim);
+    long-context (batch=1) → shard the sequence dim of attention caches over
+    the data axes instead (sharded-softmax decode, DESIGN.md §4).
+
+    seq_shard_tp (serve_tp profile): shard the attention-cache sequence dim
+    over `model` — decode attention becomes sharded-softmax over S and the
+    per-layer collective shrinks to the (B, Hq, hd) partial combine, instead
+    of re-gathering hd-sharded cache slices (§Perf decode iteration).
+    Otherwise the kv-head/feature dim is model-sharded when divisible.
+    """
+    def spec_of(kp, leaf) -> P:
+        shape = leaf.shape
+        path = jax.tree_util.keystr(kp)
+        spec: list = [None] * len(shape)
+        # stacked layer dim(s) first; find the batch dim = first dim == batch
+        bdim = None
+        for i, s in enumerate(shape):
+            if s == batch:
+                bdim = i
+                break
+        if bdim is not None and batch % dp_total == 0 and batch > 1:
+            spec[bdim] = dp_axes
+        elif seq_axis_shard and len(shape) >= 3 and ("k" in path or "v" in path):
+            # attention cache (L, B, S, Hk, hd): shard S (dim -3)
+            sdim = len(shape) - 3
+            if shape[sdim] % dp_total == 0:
+                spec[sdim] = dp_axes
+        is_attn_cache = len(shape) >= 4 and ("k" in path or "v" in path)
+        if seq_shard_tp and is_attn_cache:
+            sdim = len(shape) - 3
+            if spec[sdim] is None and shape[sdim] % tp == 0:
+                spec[sdim] = tp_axis
+                return P(*spec)
+        # model-shard the trailing feature dim when cleanly divisible
+        if len(shape) >= 2 and shape[-1] % tp == 0 and spec[-1] is None:
+            spec[-1] = tp_axis
+        elif len(shape) >= 2 and shape[-2] % tp == 0 and spec[-2] is None:
+            spec[-2] = tp_axis
+        return P(*spec)
+
+    flat = jax.tree_util.tree_flatten_with_path(abstract_cache)
+    specs = [spec_of(kp, leaf) for kp, leaf in flat[0]]
+    return jax.tree_util.tree_unflatten(flat[1], specs)

@@ -1,0 +1,508 @@
+"""Attention-based LM families: dense, moe, vlm (interleaved cross-attn),
+audio (in-layer cross-attn). Scan-over-layers with stacked params so HLO
+size is depth-independent; optional activation-sequence sharding between
+layers (Megatron-SP style) keeps the rematerialized residual stream within
+VMEM/HBM budgets at 4k×256 batches.
+
+Decode uses per-layer KV caches stacked on a leading layer axis; sliding-
+window masking supports the `long_500k` serving shape.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import (COMPUTE_DTYPE, apply_rope, blockwise_attention,
+                                 decode_attention, dense_init, embed_init,
+                                 gelu_mlp, rms_norm, swiglu_mlp)
+from repro.models.moe import MoEConfig, moe_ffn
+
+PARAM_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def _attn_init(cfg: ArchConfig, key: jax.Array, kv_from_ctx: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    D = cfg.d_model
+    p = {
+        "wq": dense_init(ks[0], D, cfg.q_dim, PARAM_DTYPE),
+        "wk": dense_init(ks[1], D, cfg.kv_dim, PARAM_DTYPE),
+        "wv": dense_init(ks[2], D, cfg.kv_dim, PARAM_DTYPE),
+        "wo": dense_init(ks[3], cfg.q_dim, D, PARAM_DTYPE),
+    }
+    if cfg.qkv_bias and not kv_from_ctx:
+        p["bq"] = jnp.zeros((cfg.q_dim,), PARAM_DTYPE)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), PARAM_DTYPE)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), PARAM_DTYPE)
+    return p
+
+
+def _mlp_init(cfg: ArchConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 3)
+    D, F = cfg.d_model, cfg.d_ff
+    return {"w_gate": dense_init(ks[0], D, F, PARAM_DTYPE),
+            "w_up": dense_init(ks[1], D, F, PARAM_DTYPE),
+            "w_down": dense_init(ks[2], F, D, PARAM_DTYPE)}
+
+
+def _moe_init(cfg: ArchConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 7)
+    D, E = cfg.d_model, cfg.n_experts
+    Fe = cfg.moe_d_ff or cfg.d_ff
+    def expert_stack(k, d_in, d_out):
+        return jnp.stack([dense_init(kk, d_in, d_out, PARAM_DTYPE)
+                          for kk in jax.random.split(k, E)])
+    p = {
+        "router": dense_init(ks[0], D, E, jnp.float32),
+        "w_gate": expert_stack(ks[1], D, Fe),
+        "w_up": expert_stack(ks[2], D, Fe),
+        "w_down": expert_stack(ks[3], Fe, D),
+    }
+    if cfg.n_shared_experts:
+        Fs = Fe * cfg.n_shared_experts
+        p["shared"] = {"w_gate": dense_init(ks[4], D, Fs, PARAM_DTYPE),
+                       "w_up": dense_init(ks[5], D, Fs, PARAM_DTYPE),
+                       "w_down": dense_init(ks[6], Fs, D, PARAM_DTYPE)}
+    return p
+
+
+def _self_layer_init(cfg: ArchConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 3)
+    D = cfg.d_model
+    layer = {
+        "ln1": jnp.ones((D,), jnp.float32),
+        "ln2": jnp.ones((D,), jnp.float32),
+        "attn": _attn_init(cfg, ks[0]),
+    }
+    if cfg.family == "moe":
+        layer["moe"] = _moe_init(cfg, ks[1])
+    else:
+        layer["mlp"] = _mlp_init(cfg, ks[1])
+    if cfg.family == "audio":      # in-layer cross-attention (MusicGen)
+        layer["ln_x"] = jnp.ones((D,), jnp.float32)
+        layer["xattn"] = _attn_init(cfg, ks[2], kv_from_ctx=True)
+    return layer
+
+
+def _cross_layer_init(cfg: ArchConfig, key: jax.Array) -> dict:
+    """Llama-3.2-Vision style gated cross-attention block."""
+    ks = jax.random.split(key, 2)
+    D = cfg.d_model
+    return {
+        "ln1": jnp.ones((D,), jnp.float32),
+        "ln2": jnp.ones((D,), jnp.float32),
+        "xattn": _attn_init(cfg, ks[0], kv_from_ctx=True),
+        "mlp": _mlp_init(cfg, ks[1]),
+        "gate_attn": jnp.zeros((1,), jnp.float32),
+        "gate_mlp": jnp.zeros((1,), jnp.float32),
+    }
+
+
+def _stack(trees: list) -> Any:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def vlm_group_shape(cfg: ArchConfig) -> tuple[int, int]:
+    """(n_groups, self_per_group) for interleaved cross-attention."""
+    n_groups = cfg.n_layers // cfg.cross_attn_every
+    self_per_group = cfg.cross_attn_every - 1
+    return n_groups, self_per_group
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 8)
+    D, V = cfg.d_model, cfg.vocab_size
+    params: dict = {
+        "embed": embed_init(ks[0], V, D, PARAM_DTYPE),
+        "final_norm": jnp.ones((D,), jnp.float32),
+        "lm_head": dense_init(ks[1], D, V, PARAM_DTYPE),
+    }
+    if cfg.family == "vlm":
+        n_groups, spg = vlm_group_shape(cfg)
+        layer_keys = jax.random.split(ks[2], n_groups * spg)
+        layers = [_self_layer_init(cfg, k) for k in layer_keys]
+        stacked = _stack(layers)
+        params["layers"] = jax.tree.map(
+            lambda x: x.reshape((n_groups, spg) + x.shape[1:]), stacked)
+        cross_keys = jax.random.split(ks[3], n_groups)
+        params["cross_layers"] = _stack(
+            [_cross_layer_init(cfg, k) for k in cross_keys])
+    else:
+        layer_keys = jax.random.split(ks[2], cfg.n_layers)
+        params["layers"] = _stack([_self_layer_init(cfg, k) for k in layer_keys])
+    return params
+
+
+def abstract_params(cfg: ArchConfig) -> Any:
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+class FwdOptions(NamedTuple):
+    seq_shard_axis: Optional[str] = None    # Megatron-SP residual sharding
+    dp_axes: tuple = ("data",)              # batch-dim axes INSIDE a cluster
+    remat: bool = True
+    q_block: int = 256
+    kv_block: int = 512
+    # §Perf hillclimb levers (EXPERIMENTS.md):
+    parallel_q: bool = False       # Q blocks as a shardable dim, not a scan
+    gather_kv: bool = False        # gather K/V over model before attention
+    weight_gather: bool = False    # ZeRO-3 style per-layer weight all-gather
+    expert_axis: Optional[str] = None  # pin MoE expert buffers to this axis
+
+
+def _maybe_shard_seq(x: jax.Array, opts: FwdOptions) -> jax.Array:
+    if opts.seq_shard_axis is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = P(opts.dp_axes if opts.dp_axes else None, opts.seq_shard_axis,
+             None)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _self_attention(layer: dict, x: jax.Array, cfg: ArchConfig,
+                    positions: jax.Array, opts: FwdOptions
+                    ) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    B, S, D = x.shape
+    a = layer["attn"]
+    q = jnp.einsum("bsd,dh->bsh", x, a["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dh->bsh", x, a["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dh->bsh", x, a["wv"].astype(x.dtype))
+    if "bq" in a:
+        q = q + a["bq"].astype(q.dtype)
+        k = k + a["bk"].astype(k.dtype)
+        v = v + a["bv"].astype(v.dtype)
+    q = q.reshape(B, S, cfg.n_heads, cfg.hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if opts.gather_kv:
+        from jax.sharding import PartitionSpec as P
+        full = P(opts.dp_axes if opts.dp_axes else None, None, None, None)
+        k = jax.lax.with_sharding_constraint(k, full)
+        v = jax.lax.with_sharding_constraint(v, full)
+    o = blockwise_attention(q, k, v, causal=True, window=cfg.sliding_window,
+                            q_block=opts.q_block, kv_block=opts.kv_block,
+                            parallel_q=opts.parallel_q)
+    out = jnp.einsum("bsh,hd->bsd", o.reshape(B, S, cfg.q_dim),
+                     a["wo"].astype(x.dtype))
+    return out, (k, v)
+
+
+def _cross_attention(block_params: dict, x: jax.Array, ctx_kv: tuple,
+                     cfg: ArchConfig) -> jax.Array:
+    """Attend from x (B,S,D) to precomputed context K/V (B,Nc,Hk,hd)."""
+    B, S, D = x.shape
+    a = block_params
+    k, v = ctx_kv
+    q = jnp.einsum("bsd,dh->bsh", x, a["wq"].astype(x.dtype))
+    q = q.reshape(B, S, cfg.n_heads, cfg.hd)
+    o = blockwise_attention(q, k, v, causal=False, window=0)
+    return jnp.einsum("bsh,hd->bsd", o.reshape(B, S, cfg.q_dim),
+                      a["wo"].astype(x.dtype))
+
+
+def _context_kv(xattn: dict, context: jax.Array, cfg: ArchConfig) -> tuple:
+    B, Nc, D = context.shape
+    k = jnp.einsum("bnd,dh->bnh", context, xattn["wk"].astype(context.dtype))
+    v = jnp.einsum("bnd,dh->bnh", context, xattn["wv"].astype(context.dtype))
+    return (k.reshape(B, Nc, cfg.n_kv_heads, cfg.hd),
+            v.reshape(B, Nc, cfg.n_kv_heads, cfg.hd))
+
+
+def _ffn(layer: dict, x: jax.Array, cfg: ArchConfig,
+         opts: "FwdOptions | None" = None) -> tuple[jax.Array, jax.Array]:
+    """Returns (out, moe_aux_loss)."""
+    if cfg.family == "moe":
+        B, S, D = x.shape
+        moe_cfg = MoEConfig(cfg.n_experts, cfg.experts_per_token,
+                            cfg.capacity_factor)
+        expert_sharding = None
+        combine = "gather"
+        if opts is not None and opts.expert_axis:
+            from jax.sharding import PartitionSpec as P
+            expert_sharding = P(opts.expert_axis, None, None)
+            combine = "scatter"
+        out, aux = moe_ffn(x.reshape(B * S, D), layer["moe"], moe_cfg,
+                           expert_sharding=expert_sharding, combine=combine)
+        return out.reshape(B, S, D), aux
+    return swiglu_mlp(x, layer["mlp"]["w_gate"], layer["mlp"]["w_up"],
+                      layer["mlp"]["w_down"]), jnp.zeros((), jnp.float32)
+
+
+def _self_block(layer: dict, x: jax.Array, cfg: ArchConfig,
+                positions: jax.Array, opts: FwdOptions,
+                ctx: Optional[jax.Array] = None
+                ) -> tuple[jax.Array, jax.Array, tuple[jax.Array, jax.Array]]:
+    if opts.weight_gather:
+        # ZeRO-3: gather this layer's weights to full (replicated over the
+        # model axis) right before use; storage stays sharded. Routed-expert
+        # stacks are EXCLUDED — they stay expert-parallel on the model axis
+        # and tokens move via all-to-all instead (gathering E×D×Fe per layer
+        # regressed deepseek-moe 2.5× — EXPERIMENTS §Perf iter 3).
+        from jax.sharding import PartitionSpec as P
+
+        def gather_leaf(kp, t):
+            path = jax.tree_util.keystr(kp)
+            if "moe" in path and ("w_gate" in path or "w_up" in path
+                                  or "w_down" in path) and "shared" not in path:
+                return t
+            return jax.lax.with_sharding_constraint(t, P(*([None] * t.ndim)))
+
+        layer = jax.tree_util.tree_map_with_path(gather_leaf, layer)
+    h = rms_norm(x, layer["ln1"], cfg.norm_eps)
+    att, kv = _self_attention(layer, h, cfg, positions, opts)
+    x = x + att
+    if cfg.family == "audio" and ctx is not None:     # MusicGen in-layer xattn
+        h = rms_norm(x, layer["ln_x"], cfg.norm_eps)
+        ctx_kv = _context_kv(layer["xattn"], ctx, cfg)
+        x = x + _cross_attention(layer["xattn"], h, ctx_kv, cfg)
+    h = rms_norm(x, layer["ln2"], cfg.norm_eps)
+    f, aux = _ffn(layer, h, cfg, opts)
+    x = _maybe_shard_seq(x + f, opts)
+    return x, aux, kv
+
+
+def _cross_block(block: dict, x: jax.Array, ctx: jax.Array, cfg: ArchConfig,
+                 opts: FwdOptions) -> jax.Array:
+    h = rms_norm(x, block["ln1"], cfg.norm_eps)
+    ctx_kv = _context_kv(block["xattn"], ctx, cfg)
+    att = _cross_attention(block["xattn"], h, ctx_kv, cfg)
+    x = x + jnp.tanh(block["gate_attn"].astype(jnp.float32)).astype(x.dtype) * att
+    h = rms_norm(x, block["ln2"], cfg.norm_eps)
+    f = swiglu_mlp(h, block["mlp"]["w_gate"], block["mlp"]["w_up"],
+                   block["mlp"]["w_down"])
+    x = x + jnp.tanh(block["gate_mlp"].astype(jnp.float32)).astype(x.dtype) * f
+    return _maybe_shard_seq(x, opts)
+
+
+def forward(params: dict, tokens: jax.Array, cfg: ArchConfig,
+            context: Optional[jax.Array] = None,
+            opts: FwdOptions = FwdOptions(),
+            collect_cache: bool = False):
+    """tokens (B, S) → (logits (B, S, V), moe_aux_loss ()) and, when
+    ``collect_cache``, the stacked per-layer (k, v) for prefill.
+
+    context: (B, Nc, D) precomputed frontend embeddings for vlm/audio.
+    """
+    B, S = tokens.shape
+    x = params["embed"].astype(COMPUTE_DTYPE)[tokens]
+    x = _maybe_shard_seq(x, opts)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def self_body(carry, layer):
+        x, aux = carry
+        fn = _self_block
+        if opts.remat:
+            fn = jax.checkpoint(fn, static_argnums=(2, 4))
+        x, aux_l, kv = fn(layer, x, cfg, positions, opts,
+                          context if cfg.family == "audio" else None)
+        return (x, aux + aux_l), (kv if collect_cache else None)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    kvs = None
+    if cfg.family == "vlm":
+        assert context is not None, "vlm forward needs image embeddings"
+
+        def group_body(carry, group):
+            layers, cross = group
+            carry, kv_g = jax.lax.scan(self_body, carry, layers)
+            x, aux = carry
+            fn = _cross_block
+            if opts.remat:
+                fn = jax.checkpoint(fn, static_argnums=(3, 4))
+            x = fn(cross, x, context, cfg, opts)
+            return (x, aux), kv_g
+
+        (x, aux), kvs = jax.lax.scan(group_body, (x, aux0),
+                                     (params["layers"], params["cross_layers"]))
+        if collect_cache:  # (n_groups, spg, ...) → (L, ...)
+            kvs = jax.tree.map(
+                lambda t: t.reshape((t.shape[0] * t.shape[1],) + t.shape[2:]), kvs)
+    else:
+        (x, aux), kvs = jax.lax.scan(self_body, (x, aux0), params["layers"])
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    if collect_cache:
+        return logits, aux, kvs
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (single-token serve_step with KV caches)
+# ---------------------------------------------------------------------------
+
+class DecodeCache(NamedTuple):
+    k: jax.Array            # (L, B, S, Hk, hd) — stacked self-attn K
+    v: jax.Array
+    ctx_k: Optional[jax.Array] = None   # (Lc, B, Nc, Hk, hd) cross-attn K
+    ctx_v: Optional[jax.Array] = None
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int,
+               dtype=COMPUTE_DTYPE) -> DecodeCache:
+    if cfg.family == "vlm":
+        n_groups, spg = vlm_group_shape(cfg)
+        L = n_groups * spg
+        Lc = n_groups
+    elif cfg.family == "audio":
+        L = Lc = cfg.n_layers
+    else:
+        L, Lc = cfg.n_layers, 0
+    k = jnp.zeros((L, batch, seq_len, cfg.n_kv_heads, cfg.hd), dtype)
+    v = jnp.zeros_like(k)
+    if Lc:
+        ck = jnp.zeros((Lc, batch, cfg.n_context_tokens, cfg.n_kv_heads, cfg.hd),
+                       dtype)
+        return DecodeCache(k, v, ck, jnp.zeros_like(ck))
+    return DecodeCache(k, v)
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, seq_len: int) -> Any:
+    return jax.eval_shape(lambda: init_cache(cfg, batch, seq_len))
+
+
+def _decode_self(layer: dict, x: jax.Array, kc: jax.Array, vc: jax.Array,
+                 pos: jax.Array, cfg: ArchConfig) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B, 1, D); kc/vc: (B, S, Hk, hd). Returns (attn_out, new_kc, new_vc)."""
+    B = x.shape[0]
+    a = layer["attn"]
+    q = jnp.einsum("btd,dh->bth", x, a["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dh->bth", x, a["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dh->bth", x, a["wv"].astype(x.dtype))
+    if "bq" in a:
+        q = q + a["bq"].astype(q.dtype)
+        k = k + a["bk"].astype(k.dtype)
+        v = v + a["bv"].astype(v.dtype)
+    q = q.reshape(B, 1, cfg.n_heads, cfg.hd)
+    k = k.reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+    v = v.reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+    pvec = jnp.broadcast_to(pos[None], (B, 1)).astype(jnp.int32)
+    q = apply_rope(q, pvec, cfg.rope_theta)
+    k = apply_rope(k, pvec, cfg.rope_theta)
+    kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, pos, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, pos, 0, 0))
+    o = decode_attention(q, kc, vc, pos, window=cfg.sliding_window)
+    out = jnp.einsum("bth,hd->btd", o.reshape(B, 1, cfg.q_dim),
+                     a["wo"].astype(x.dtype))
+    return out, kc, vc
+
+
+def _decode_cross(xattn: dict, x: jax.Array, ck: jax.Array, cv: jax.Array,
+                  cfg: ArchConfig) -> jax.Array:
+    B = x.shape[0]
+    q = jnp.einsum("btd,dh->bth", x, xattn["wq"].astype(x.dtype))
+    q = q.reshape(B, 1, cfg.n_heads, cfg.hd)
+    nc = ck.shape[1]
+    o = decode_attention(q, ck, cv, jnp.asarray(nc - 1, jnp.int32), window=0)
+    return jnp.einsum("bth,hd->btd", o.reshape(B, 1, cfg.q_dim),
+                      xattn["wo"].astype(x.dtype))
+
+
+def decode_step(params: dict, cache: DecodeCache, tokens: jax.Array,
+                pos: jax.Array, cfg: ArchConfig) -> tuple[jax.Array, DecodeCache]:
+    """One serve step: tokens (B, 1) at position ``pos`` → (logits (B,1,V), cache)."""
+    B = tokens.shape[0]
+    x = params["embed"].astype(COMPUTE_DTYPE)[tokens]
+
+    def self_body(x, scanned):
+        layer, kc, vc, extra = scanned
+        h = rms_norm(x, layer["ln1"], cfg.norm_eps)
+        att, kc, vc = _decode_self(layer, h, kc, vc, pos, cfg)
+        x = x + att
+        if cfg.family == "audio":
+            ck, cv = extra
+            h = rms_norm(x, layer["ln_x"], cfg.norm_eps)
+            x = x + _decode_cross(layer["xattn"], h, ck, cv, cfg)
+        h = rms_norm(x, layer["ln2"], cfg.norm_eps)
+        f, _ = _ffn(layer, h, cfg)
+        return x + f, (kc, vc)
+
+    if cfg.family == "vlm":
+        n_groups, spg = vlm_group_shape(cfg)
+        kg = cache.k.reshape((n_groups, spg) + cache.k.shape[1:])
+        vg = cache.v.reshape((n_groups, spg) + cache.v.shape[1:])
+
+        def group_body(x, scanned):
+            layers, kcs, vcs, cross, ck, cv = scanned
+
+            def inner(x, s):
+                layer, kc, vc = s
+                x, (kc, vc) = self_body(x, (layer, kc, vc, None))
+                return x, (kc, vc)
+
+            x, (kcs, vcs) = jax.lax.scan(inner, x, (layers, kcs, vcs))
+            h = rms_norm(x, cross["ln1"], cfg.norm_eps)
+            att = _decode_cross(cross["xattn"], h, ck, cv, cfg)
+            x = x + jnp.tanh(cross["gate_attn"].astype(jnp.float32)
+                             ).astype(x.dtype) * att
+            h = rms_norm(x, cross["ln2"], cfg.norm_eps)
+            f = swiglu_mlp(h, cross["mlp"]["w_gate"], cross["mlp"]["w_up"],
+                           cross["mlp"]["w_down"])
+            x = x + jnp.tanh(cross["gate_mlp"].astype(jnp.float32)
+                             ).astype(x.dtype) * f
+            return x, (kcs, vcs)
+
+        x, (kg, vg) = jax.lax.scan(
+            group_body, x, (params["layers"], kg, vg, params["cross_layers"],
+                            cache.ctx_k, cache.ctx_v))
+        new_cache = DecodeCache(kg.reshape(cache.k.shape),
+                                vg.reshape(cache.v.shape),
+                                cache.ctx_k, cache.ctx_v)
+    elif cfg.family == "audio":
+        def body(x, s):
+            layer, kc, vc, ck, cv = s
+            return self_body(x, (layer, kc, vc, (ck, cv)))
+
+        x, (kcs, vcs) = jax.lax.scan(
+            body, x, (params["layers"], cache.k, cache.v,
+                      cache.ctx_k, cache.ctx_v))
+        new_cache = DecodeCache(kcs, vcs, cache.ctx_k, cache.ctx_v)
+    else:
+        def body(x, s):
+            layer, kc, vc = s
+            return self_body(x, (layer, kc, vc, None))
+
+        x, (kcs, vcs) = jax.lax.scan(body, x, (params["layers"], cache.k, cache.v))
+        new_cache = DecodeCache(kcs, vcs)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", x, params["lm_head"].astype(x.dtype))
+    return logits, new_cache
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: ArchConfig,
+            context: Optional[jax.Array] = None,
+            opts: FwdOptions = FwdOptions(remat=False)) -> tuple[jax.Array, DecodeCache]:
+    """Prefill: run the full sequence once, collecting the true per-layer
+    K/V (scan ys) into a prompt-sized cache, plus last-position logits."""
+    logits, _, kvs = forward(params, tokens, cfg, context=context, opts=opts,
+                             collect_cache=True)
+    ks_, vs_ = kvs
+    cache = DecodeCache(ks_.astype(COMPUTE_DTYPE), vs_.astype(COMPUTE_DTYPE))
+    if cfg.family in ("vlm", "audio"):
+        assert context is not None
+        if cfg.family == "vlm":
+            stacked = params["cross_layers"]["xattn"]
+        else:
+            stacked = params["layers"]["xattn"]
+
+        def per_layer(xa):
+            return _context_kv(xa, context.astype(COMPUTE_DTYPE), cfg)
+
+        ck, cv = jax.vmap(per_layer)(stacked)
+        cache = cache._replace(ctx_k=ck.astype(COMPUTE_DTYPE),
+                               ctx_v=cv.astype(COMPUTE_DTYPE))
+    return logits[:, -1:], cache

@@ -1,0 +1,9 @@
+from repro.optim.sgd import SGDState, sgd_init, sgd_update
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedules import constant_lr, cosine_decay_lr, warmup_cosine_lr
+
+__all__ = [
+    "SGDState", "sgd_init", "sgd_update",
+    "AdamWState", "adamw_init", "adamw_update",
+    "constant_lr", "cosine_decay_lr", "warmup_cosine_lr",
+]

@@ -1,0 +1,48 @@
+"""AdamW for the LLM-scale training path."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    step: jax.Array
+
+
+def adamw_init(params: Any) -> AdamWState:
+    z = lambda: jax.tree.map(jnp.zeros_like, params)
+    return AdamWState(z(), z(), jnp.zeros((), jnp.int32))
+
+
+def adamw_update(grads: Any, state: AdamWState, params: Any,
+                 lr: float | Callable[[jax.Array], jax.Array] = 3e-4,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1,
+                 grad_clip: float | None = 1.0) -> tuple[Any, AdamWState]:
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+    if grad_clip is not None:
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state.nu, grads)
+    t = step.astype(jnp.float32)
+    mu_hat_scale = 1.0 / (1.0 - b1 ** t)
+    nu_hat_scale = 1.0 / (1.0 - b2 ** t)
+
+    def upd(p, m, v):
+        m_hat = m * mu_hat_scale
+        v_hat = v * nu_hat_scale
+        return (p - lr_t * (m_hat / (jnp.sqrt(v_hat) + eps) + weight_decay * p)
+                ).astype(p.dtype)
+
+    return jax.tree.map(upd, params, mu, nu), AdamWState(mu, nu, step)

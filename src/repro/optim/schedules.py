@@ -1,0 +1,27 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay_lr(lr: float, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        frac = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return lr * (final_frac + (1.0 - final_frac) * cos)
+    return f
+
+
+def warmup_cosine_lr(lr: float, warmup_steps: int, total_steps: int,
+                     final_frac: float = 0.1):
+    cosine = cosine_decay_lr(lr, max(total_steps - warmup_steps, 1), final_frac)
+    def f(step):
+        t = step.astype(jnp.float32)
+        warm = lr * t / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cosine(step - warmup_steps))
+    return f

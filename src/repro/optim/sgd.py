@@ -1,0 +1,30 @@
+"""SGD with momentum and lr decay — the paper's optimizer (§7.1:
+"SGD optimizer ... learning rate 0.001, decay factor equal to half of the
+learning rate, momentum 0.9")."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SGDState(NamedTuple):
+    momentum: Any       # pytree like params
+    step: jax.Array     # () int32
+
+
+def sgd_init(params: Any) -> SGDState:
+    return SGDState(jax.tree.map(jnp.zeros_like, params), jnp.zeros((), jnp.int32))
+
+
+def sgd_update(grads: Any, state: SGDState, params: Any,
+               lr: float = 1e-3, momentum: float = 0.9,
+               decay: float = 5e-4) -> tuple[Any, SGDState]:
+    """Keras-style time-based decay: lr_t = lr / (1 + decay * t)."""
+    t = state.step.astype(jnp.float32)
+    lr_t = lr / (1.0 + decay * t)
+    new_m = jax.tree.map(lambda m, g: momentum * m + g, state.momentum, grads)
+    new_p = jax.tree.map(lambda p, m: p - lr_t * m, params, new_m)
+    return new_p, SGDState(new_m, state.step + 1)

@@ -1,0 +1,5 @@
+from repro.serving.engine import GenerationRequest, ServingEngine
+from repro.serving.sampler import SamplerConfig, sample_token
+
+__all__ = ["GenerationRequest", "ServingEngine", "SamplerConfig",
+           "sample_token"]

@@ -1,0 +1,146 @@
+"""Batched serving engine over the PoFEL global model.
+
+Static-batch generation loop built on ``Model.prefill`` / ``decode_step``
+with per-request lengths, EOS handling, and pluggable sampling — the same
+decode_step the decode_32k / long_500k dry-run shapes lower, so what is
+validated at 256 chips is what serves here at CPU scale.
+
+Requests are padded into a fixed batch; the engine tracks per-request
+progress and returns completions when all requests finish or hit their
+token budget. (Continuous batching at pod scale would swap requests into
+finished slots — the slot bookkeeping below is written so that extension
+is mechanical.)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model_api import Model
+from repro.models.transformer import FwdOptions
+from repro.serving.sampler import SamplerConfig, sample_token
+
+
+@dataclass
+class GenerationRequest:
+    request_id: int
+    prompt: np.ndarray                  # (prompt_len,) int32
+    max_new_tokens: int = 32
+    eos_token: Optional[int] = None
+
+
+@dataclass
+class Completion:
+    request_id: int
+    tokens: List[int]
+    finished_by: str                    # 'eos' | 'length'
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params: Any,
+                 sampler: SamplerConfig = SamplerConfig(), seed: int = 0):
+        self.model = model
+        self.params = params
+        self.sampler = sampler
+        self.key = jax.random.key(seed)
+        self._decode = jax.jit(model.decode_step)
+
+    def _pad_prompts(self, requests: List[GenerationRequest]) -> tuple:
+        max_p = max(len(r.prompt) for r in requests)
+        B = len(requests)
+        toks = np.zeros((B, max_p), np.int32)
+        lens = np.zeros((B,), np.int32)
+        for i, r in enumerate(requests):
+            # left-pad so every prompt ends at position max_p-1
+            toks[i, max_p - len(r.prompt):] = r.prompt
+            lens[i] = len(r.prompt)
+        return jnp.asarray(toks), lens, max_p
+
+    def generate(self, requests: List[GenerationRequest]) -> List[Completion]:
+        assert requests
+        B = len(requests)
+        toks, lens, max_p = self._pad_prompts(requests)
+        budget = max(r.max_new_tokens for r in requests)
+        total = max_p + budget
+
+        batch = {"tokens": toks}
+        if self.model.needs_context():
+            batch["context"] = 0.1 * jnp.ones(
+                self.model.context_shape(B), jnp.float32)
+
+        if self.model.cfg.rwkv or self.model.cfg.family == "hybrid":
+            # recurrent models: replay the prompt through decode steps so
+            # the O(1) state absorbs it (left-padding contributes a short
+            # constant-token prefix, harmless for the state)
+            cache = self.model.init_cache(B, total)
+            logits = None
+            for i in range(max_p):
+                logits, cache = self._decode(self.params, cache,
+                                             toks[:, i:i + 1],
+                                             jnp.asarray(i, jnp.int32))
+        else:
+            logits, cache = self.model.prefill(self.params, batch,
+                                               FwdOptions(remat=False))
+            cache = self._grow_cache(cache, max_p, budget, B, total)
+
+        out_tokens: List[List[int]] = [[] for _ in requests]
+        finished = np.zeros((B,), bool)
+        finished_by = ["length"] * B
+
+        self.key, sub = jax.random.split(self.key)
+        tok = sample_token(logits[:, -1].astype(jnp.float32), sub,
+                           self.sampler)[:, None]
+        for i in range(B):
+            out_tokens[i].append(int(tok[i, 0]))
+
+        for step in range(budget - 1):
+            pos = jnp.asarray(max_p + step, jnp.int32)
+            logits, cache = self._decode(self.params, cache, tok, pos)
+            self.key, sub = jax.random.split(self.key)
+            tok = sample_token(logits[:, -1].astype(jnp.float32), sub,
+                               self.sampler)[:, None]
+            t_host = np.asarray(tok[:, 0])
+            for i, r in enumerate(requests):
+                if finished[i]:
+                    continue
+                if len(out_tokens[i]) >= r.max_new_tokens:
+                    finished[i] = True
+                    continue
+                out_tokens[i].append(int(t_host[i]))
+                if r.eos_token is not None and t_host[i] == r.eos_token:
+                    finished[i] = True
+                    finished_by[i] = "eos"
+            if finished.all():
+                break
+
+        return [Completion(r.request_id, out_tokens[i], finished_by[i])
+                for i, r in enumerate(requests)]
+
+    def _grow_cache(self, cache: Any, prompt_len: int, budget: int,
+                    batch: int, total: int) -> Any:
+        """Extend attention caches from prompt_len to total slots."""
+
+        def grow(leaf):
+            for ax, s in enumerate(leaf.shape):
+                if s == prompt_len and leaf.ndim >= 4:
+                    pad = [(0, 0)] * leaf.ndim
+                    pad[ax] = (0, budget)
+                    return jnp.pad(leaf, pad)
+            return leaf
+
+        return jax.tree.map(grow, cache)
+
+
+def serve_batch(model: Model, params: Any, prompts: List[List[int]],
+                max_new_tokens: int = 16,
+                sampler: SamplerConfig = SamplerConfig()) -> List[List[int]]:
+    """One-shot convenience wrapper."""
+    engine = ServingEngine(model, params, sampler)
+    reqs = [GenerationRequest(i, np.asarray(p, np.int32), max_new_tokens)
+            for i, p in enumerate(prompts)]
+    return [c.tokens for c in engine.generate(reqs)]

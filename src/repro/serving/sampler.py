@@ -1,0 +1,39 @@
+"""Token samplers for the serving engine: greedy / temperature / top-k /
+top-p (nucleus), all jit-friendly."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SamplerConfig(NamedTuple):
+    temperature: float = 0.0      # 0 → greedy
+    top_k: int = 0                # 0 → disabled
+    top_p: float = 1.0            # 1 → disabled
+
+
+def sample_token(logits: jax.Array, key: jax.Array,
+                 cfg: SamplerConfig) -> jax.Array:
+    """(B, V) logits → (B,) int32 tokens."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / cfg.temperature
+
+    if cfg.top_k > 0:
+        kth = jnp.sort(logits, axis=-1)[:, -cfg.top_k][:, None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+
+    if cfg.top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # smallest set whose mass ≥ top_p (always keep the argmax)
+        cutoff_idx = jnp.sum(cum < cfg.top_p, axis=-1)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None],
+                                     axis=-1)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+
+    return jax.random.categorical(key, logits).astype(jnp.int32)

@@ -1,0 +1,88 @@
+"""Block / ledger / smart-contract mechanics."""
+
+import numpy as np
+import pytest
+
+from repro.blockchain.block import GENESIS_HASH, Block, block_hash
+from repro.blockchain.ledger import InvalidBlock, Ledger
+from repro.blockchain.smart_contract import (ContractError, VoteSubmission,
+                                             VoteTallyContract)
+from repro.core import crypto
+
+
+def _block(index=0, prev=GENESIS_HASH, leader=0):
+    return Block(index=index, round=index, leader_id=leader, prev_hash=prev,
+                 model_digests={0: "aa", 1: "bb"}, global_model_digest="cc",
+                 votes={0: 0, 1: 0}, vote_weights={0: 1.0, 1: 1.0},
+                 advotes={0: 2.0, 1: 0.0})
+
+
+def test_append_and_verify_chain():
+    kp = crypto.ECDSAKeyPair.generate(b"leader")
+    led = Ledger(0)
+    b0 = _block().signed(kp)
+    led.append(b0, leader_pk=kp.public_key)
+    b1 = _block(index=1, prev=block_hash(b0)).signed(kp)
+    led.append(b1, leader_pk=kp.public_key)
+    assert led.verify_chain() and led.height == 2
+
+
+def test_chain_break_rejected():
+    led = Ledger(0)
+    led.append(_block())
+    with pytest.raises(InvalidBlock):
+        led.append(_block(index=1, prev="deadbeef"))
+
+
+def test_tampered_signature_rejected():
+    kp = crypto.ECDSAKeyPair.generate(b"leader")
+    other = crypto.ECDSAKeyPair.generate(b"imposter")
+    led = Ledger(0)
+    with pytest.raises(InvalidBlock):
+        led.append(_block().signed(other), leader_pk=kp.public_key)
+
+
+def test_retally_mismatch_rejected():
+    led = Ledger(0)
+    with pytest.raises(InvalidBlock):
+        led.append(_block(leader=1), retally=lambda b: 0)
+
+
+def test_ledger_persistence_roundtrip(tmp_path):
+    kp = crypto.ECDSAKeyPair.generate(b"leader")
+    led = Ledger(0)
+    led.append(_block().signed(kp), leader_pk=kp.public_key)
+    led.save(tmp_path / "chain.json")
+    led2 = Ledger.load(tmp_path / "chain.json")
+    assert led2.height == 1
+    assert led2.blocks[0].verify_signature(kp.public_key)
+
+
+def test_contract_requires_all_submissions():
+    c = VoteTallyContract(3)
+    c.submit(VoteSubmission(0, 0, 1, np.asarray([0.005, 0.99, 0.005])))
+    with pytest.raises(ContractError):
+        c.tally(0)
+
+
+def test_contract_rejects_bad_submissions():
+    c = VoteTallyContract(3)
+    with pytest.raises(ContractError):
+        c.submit(VoteSubmission(0, 0, 5, np.asarray([1, 0, 0.0])))  # vote OOR
+    with pytest.raises(ContractError):
+        c.submit(VoteSubmission(0, 0, 1, np.asarray([0.5, 0.1, 0.1])))  # sum≠1
+    c.submit(VoteSubmission(0, 0, 1, np.asarray([0.005, 0.99, 0.005])))
+    with pytest.raises(ContractError):  # duplicate
+        c.submit(VoteSubmission(0, 0, 1, np.asarray([0.005, 0.99, 0.005])))
+
+
+def test_contract_tally_deterministic_and_cached():
+    n = 4
+    c = VoteTallyContract(n)
+    preds = np.full((n,), (1 - 0.99) / (n - 1), np.float32)
+    preds[2] = 0.99
+    for i in range(n):
+        c.submit(VoteSubmission(i, 0, 2, preds))
+    r1 = c.tally(0)
+    r2 = c.tally(0)     # cached
+    assert int(r1.leader) == 2 and r1 is r2

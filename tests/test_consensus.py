@@ -1,0 +1,67 @@
+"""PoFEL consensus rounds (Alg. 1) over co-simulated BCFL nodes."""
+
+import numpy as np
+import pytest
+
+from repro.core.consensus import PoFELConsensus
+
+
+def _models(n, rng, d=64):
+    return [{"w": rng.normal(size=(d,)).astype(np.float32)} for _ in range(n)]
+
+
+def test_round_produces_valid_block(rng):
+    c = PoFELConsensus(5)
+    rec = c.run_round(_models(5, rng), [10.0] * 5)
+    assert 0 <= rec.leader_id < 5
+    for led in c.ledgers:
+        assert led.height == 1 and led.verify_chain()
+    blk = c.chain[0]
+    assert blk.leader_id == rec.leader_id
+    assert blk.verify_signature(c.public_keys[rec.leader_id])
+
+
+def test_multi_round_chain_links(rng):
+    c = PoFELConsensus(4)
+    for k in range(5):
+        c.run_round(_models(4, rng), [10.0] * 4)
+    assert c.ledgers[0].verify_chain() and c.ledgers[0].height == 5
+    rounds = [b.round for b in c.chain]
+    assert rounds == list(range(5))
+
+
+def test_leader_has_highest_similarity(rng):
+    """Without vote manipulation the leader is argmax cosine similarity."""
+    c = PoFELConsensus(6)
+    models = _models(6, rng)
+    rec = c.run_round(models, [10.0] * 6)
+    assert rec.leader_id == int(np.argmax(rec.similarities))
+
+
+def test_data_size_weighting_changes_aggregate(rng):
+    c1 = PoFELConsensus(3)
+    c2 = PoFELConsensus(3)
+    models = _models(3, rng)
+    g1 = c1.run_round(models, [1.0, 1.0, 1.0]).global_model
+    g2 = c2.run_round(models, [100.0, 1.0, 1.0]).global_model
+    assert not np.allclose(g1, g2)
+
+
+def test_vote_hook_enables_attack_simulation(rng):
+    """A colluding minority votes node 0; BTSV still elects the honest
+    argmax after weights adapt (paper §7.4)."""
+    n = 8
+    c = PoFELConsensus(n)
+    models = _models(n, rng)
+
+    def bribed(i, honest_vote, preds):
+        if i >= n - 3:           # 3 malicious nodes target node 0
+            p = np.full_like(preds, (1 - 0.99) / (n - 1))
+            p[0] = 0.99
+            return 0, p
+        return honest_vote, preds
+
+    leaders = [c.run_round(models, [10.0] * n, vote_hook=bribed).leader_id
+               for _ in range(10)]
+    honest = int(np.argmax(c.run_round(models, [10.0] * n).similarities))
+    assert leaders[-1] == honest

@@ -1,0 +1,60 @@
+"""HCDS crypto primitives: SHA-256 commitment + secp256k1 ECDSA."""
+
+import hashlib
+
+import pytest
+
+from repro.core import crypto
+
+
+def test_sha256_matches_hashlib():
+    assert crypto.sha256_digest(b"ab", b"cd") == hashlib.sha256(b"abcd").digest()
+
+
+def test_keypair_deterministic_from_seed():
+    k1 = crypto.ECDSAKeyPair.generate(b"seed")
+    k2 = crypto.ECDSAKeyPair.generate(b"seed")
+    assert k1 == k2
+    k3 = crypto.ECDSAKeyPair.generate(b"other")
+    assert k1.private_key != k3.private_key
+
+
+def test_sign_verify_roundtrip():
+    kp = crypto.ECDSAKeyPair.generate(b"node-0")
+    d = crypto.sha256_digest(b"model bytes")
+    tag = crypto.dsign(d, kp.private_key)
+    assert crypto.dverify(tag, kp.public_key, d)
+
+
+def test_verify_rejects_wrong_digest():
+    kp = crypto.ECDSAKeyPair.generate(b"node-0")
+    tag = crypto.dsign(crypto.sha256_digest(b"m"), kp.private_key)
+    assert not crypto.dverify(tag, kp.public_key, crypto.sha256_digest(b"m2"))
+
+
+def test_verify_rejects_wrong_key():
+    kp0 = crypto.ECDSAKeyPair.generate(b"node-0")
+    kp1 = crypto.ECDSAKeyPair.generate(b"node-1")
+    d = crypto.sha256_digest(b"m")
+    tag = crypto.dsign(d, kp0.private_key)
+    assert not crypto.dverify(tag, kp1.public_key, d)
+
+
+def test_verify_rejects_malformed_signature():
+    kp = crypto.ECDSAKeyPair.generate(b"node-0")
+    d = crypto.sha256_digest(b"m")
+    assert not crypto.dverify((0, 1), kp.public_key, d)
+    assert not crypto.dverify((1, 0), kp.public_key, d)
+
+
+def test_signature_deterministic_rfc6979():
+    kp = crypto.ECDSAKeyPair.generate(b"node-0")
+    d = crypto.sha256_digest(b"m")
+    assert crypto.dsign(d, kp.private_key) == crypto.dsign(d, kp.private_key)
+
+
+def test_public_key_on_curve():
+    kp = crypto.ECDSAKeyPair.generate(b"x")
+    x, y = kp.public_key
+    p = crypto._P
+    assert (y * y - (x * x * x + 7)) % p == 0

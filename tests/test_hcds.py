@@ -1,0 +1,84 @@
+"""HCDS commit/reveal protocol + adversary models (paper §3.2.1, §6.1)."""
+
+import numpy as np
+import pytest
+
+from repro.core.hcds import HCDSNode, Reveal, run_hcds_round
+from repro.core import crypto
+from repro.core.serialization import serialize_pytree
+
+
+def _models(n, rng, shape=(8, 4)):
+    return [{"w": rng.normal(size=shape).astype(np.float32)} for _ in range(n)]
+
+
+def test_honest_round_all_accepted(rng):
+    nodes = [HCDSNode(i) for i in range(4)]
+    results = run_hcds_round(nodes, _models(4, rng), round=0)
+    for recv, senders in results.items():
+        assert all(r.accepted for r in senders.values())
+    for n in nodes:
+        assert len(n.accepted_models(0)) == 4  # incl. own
+
+
+def test_reveal_without_commit_rejected(rng):
+    nodes = [HCDSNode(i) for i in range(2)]
+    models = _models(2, rng)
+    nodes[0].commit(models[0], 0)
+    # node 1 never committed; its reveal must be rejected by node 0
+    fake = Reveal(1, 0, b"\x00" * 32, serialize_pytree(models[1]),
+                  (1, 1))
+    res = nodes[0].receive_reveal(fake, nodes[1].keypair.public_key)
+    assert not res.accepted and res.reason == "no-commitment"
+
+
+def test_byte_identical_plagiarism_detected(rng):
+    """Adversary copies a victim's model verbatim (paper §3.2.1 'direct
+    copying'): both commit, but the duplicate reveal is rejected."""
+    nodes = [HCDSNode(i) for i in range(3)]
+    models = _models(3, rng)
+    models[2] = models[0]          # node 2 plagiarizes node 0
+    commits = [n.commit(m, 0) for n, m in zip(nodes, models)]
+    pks = {n.node_id: n.keypair.public_key for n in nodes}
+    for c in commits:
+        for n in nodes:
+            if n.node_id != c.node_id:
+                n.receive_commit(c, pks[c.node_id])
+    reveals = [n.reveal(0) for n in nodes]
+    # deliver victim first, then plagiarist — receiver flags the duplicate
+    receiver = nodes[1]
+    assert receiver.receive_reveal(reveals[0], pks[0]).accepted
+    res = receiver.receive_reveal(reveals[2], pks[2])
+    assert not res.accepted and res.reason == "plagiarized-model"
+
+
+def test_equivocation_rejected(rng):
+    """A node cannot reveal a different model than it committed to
+    (binding property, paper §6.1)."""
+    nodes = [HCDSNode(i) for i in range(2)]
+    models = _models(2, rng)
+    pks = {n.node_id: n.keypair.public_key for n in nodes}
+    c0 = nodes[0].commit(models[0], 0)
+    nodes[1].receive_commit(c0, pks[0])
+    r0 = nodes[0].reveal(0)
+    # swap in different model bytes after commitment
+    evil = Reveal(0, 0, r0.nonce, serialize_pytree(_models(1, rng)[0]), r0.tag)
+    res = nodes[1].receive_reveal(evil, pks[0])
+    assert not res.accepted and res.reason == "digest-mismatch"
+
+
+def test_commit_with_bad_signature_rejected(rng):
+    nodes = [HCDSNode(i) for i in range(2)]
+    c = nodes[0].commit(_models(1, rng)[0], 0)
+    # verify against the wrong public key
+    res = nodes[1].receive_commit(c, nodes[1].keypair.public_key)
+    assert not res.accepted and res.reason == "bad-signature"
+
+
+def test_hiding_commit_reveals_nothing(rng):
+    """The digest is 32 bytes regardless of model size — the model cannot
+    be recovered from the commit-stage broadcast."""
+    node = HCDSNode(0)
+    big = {"w": rng.normal(size=(256, 256)).astype(np.float32)}
+    c = node.commit(big, 0)
+    assert len(c.digest) == 32

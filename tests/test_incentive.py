@@ -1,0 +1,70 @@
+"""Stackelberg incentive mechanism (paper §5, Thms 5.1-5.2)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.incentive import (NodeParams, PublisherParams, best_response,
+                                  best_response_iteration, node_utility,
+                                  optimal_delta, publisher_utility,
+                                  stackelberg_equilibrium)
+
+
+def _nodes(n=5, gamma=0.01, mu=5.0):
+    return NodeParams(jnp.full((n,), gamma), jnp.full((n,), mu))
+
+
+def test_best_response_is_stationary_point():
+    """Thm 5.1: ∂U_i/∂f_i = 0 at the best response."""
+    delta, f_rest, gamma, mu = 5000.0, 1000.0, 0.01, 5.0
+    f_star = float(best_response(jnp.asarray(f_rest), jnp.asarray(delta),
+                                 jnp.asarray(gamma), jnp.asarray(mu)))
+    grad = (delta * f_rest / (f_rest + f_star) ** 2 - 2 * gamma * mu * f_star)
+    assert abs(grad) < 1e-3
+    # and it is a maximum: utility lower on both sides
+    u = lambda f: float(node_utility(jnp.asarray(f), jnp.asarray(f_rest),
+                                     jnp.asarray(delta), jnp.asarray(gamma),
+                                     jnp.asarray(mu)))
+    assert u(f_star) >= u(f_star * 0.9) and u(f_star) >= u(f_star * 1.1)
+
+
+def test_nash_equilibrium_symmetric():
+    """Symmetric nodes reach a symmetric Nash equilibrium."""
+    nodes = _nodes(4)
+    f = best_response_iteration(jnp.asarray(3000.0), nodes,
+                                jnp.full((4,), 1.0))
+    f = np.asarray(f)
+    assert np.allclose(f, f[0], rtol=1e-3)
+    assert np.all(f > 0)
+
+
+def test_publisher_optimum_matches_theorem():
+    """Thm 5.2: δ* = F* φ / λ, and it maximizes U_tp."""
+    p = PublisherParams(B=500.0, lam=1.0, phi=5.0)
+    F = jnp.asarray(1000.0)
+    d_star = float(optimal_delta(F, p))
+    assert d_star == pytest.approx(5000.0)
+    u_star = float(publisher_utility(jnp.asarray(d_star), F, p))
+    assert u_star == pytest.approx(p.B)          # parabola apex
+    for d in (d_star * 0.8, d_star * 1.2):
+        assert float(publisher_utility(jnp.asarray(d), F, p)) < u_star
+
+
+def test_full_equilibrium_consistency():
+    """Backward induction: at (δ*, f*), the publisher's δ equals δ*(F*) and
+    node utilities are non-negative (participation constraint)."""
+    nodes = _nodes(5)
+    sol = stackelberg_equilibrium(nodes)
+    assert float(sol.delta_star) == pytest.approx(
+        float(sol.F_star) * 5.0 / 1.0, rel=1e-3)
+    assert np.all(np.asarray(sol.node_utilities) >= 0)
+    assert float(sol.publisher_utility) == pytest.approx(500.0, rel=1e-3)
+
+
+def test_heterogeneous_costs_lower_investment():
+    """Nodes with higher energy cost γ_i invest fewer CPU cycles."""
+    nodes = NodeParams(jnp.asarray([0.005, 0.01, 0.02, 0.04]),
+                       jnp.full((4,), 5.0))
+    sol = stackelberg_equilibrium(nodes)
+    f = np.asarray(sol.f_star)
+    assert np.all(np.diff(f) < 0)

@@ -1,0 +1,82 @@
+"""ME (Eq. 1-2, Alg. 3): aggregation, cosine similarity, votes, and the
+partial-term decomposition used by the sharded consensus."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.model_eval import (aggregate_global, cosine_similarities,
+                                   flatten_model, make_predictions,
+                                   model_evaluation, model_evaluation_pytrees,
+                                   partial_terms, similarity_from_partials)
+
+
+def test_aggregate_matches_manual(rng):
+    W = rng.normal(size=(4, 64)).astype(np.float32)
+    sizes = np.array([10, 20, 30, 40], np.float32)
+    gw = aggregate_global(jnp.asarray(W), jnp.asarray(sizes))
+    manual = (W * (sizes / sizes.sum())[:, None]).sum(0)
+    np.testing.assert_allclose(np.asarray(gw), manual, rtol=1e-5, atol=1e-7)
+
+
+def test_cosine_similarity_range_and_self(rng):
+    W = rng.normal(size=(5, 128)).astype(np.float32)
+    sims = cosine_similarities(jnp.asarray(W), jnp.asarray(W[2]))
+    assert np.all(np.asarray(sims) <= 1.0 + 1e-6)
+    assert np.all(np.asarray(sims) >= -1.0 - 1e-6)
+    np.testing.assert_allclose(float(sims[2]), 1.0, atol=1e-6)
+
+
+def test_vote_goes_to_most_similar(rng):
+    gw_dir = rng.normal(size=(64,)).astype(np.float32)
+    # model 3 is nearly parallel to the aggregate direction
+    W = rng.normal(size=(6, 64)).astype(np.float32)
+    W[3] = 50.0 * gw_dir + 0.01 * W[3]
+    sizes = np.ones(6, np.float32)
+    res = model_evaluation(jnp.asarray(W), jnp.asarray(sizes))
+    # gw is dominated by model 3 (largest norm), so vote should be 3
+    assert int(res.vote) == 3
+
+
+def test_predictions_sum_to_one():
+    preds = make_predictions(jnp.asarray(2), 50, g_max=0.99)
+    np.testing.assert_allclose(float(jnp.sum(preds)), 1.0, atol=1e-5)
+    assert float(preds[2]) == pytest.approx(0.99)
+
+
+def test_pytree_path_equals_stacked(rng):
+    models = [{"a": rng.normal(size=(4, 3)).astype(np.float32),
+               "b": rng.normal(size=(5,)).astype(np.float32)} for _ in range(3)]
+    sizes = [1.0, 2.0, 3.0]
+    res_tree = model_evaluation_pytrees(models, sizes)
+    W = jnp.stack([flatten_model(m) for m in models])
+    res_stack = model_evaluation(W, jnp.asarray(sizes))
+    np.testing.assert_allclose(np.asarray(res_tree.similarities),
+                               np.asarray(res_stack.similarities), rtol=1e-6)
+
+
+@settings(deadline=None, max_examples=25)
+@given(n=st.integers(2, 8), d=st.integers(2, 65), n_shards=st.sampled_from([1, 2, 4]))
+def test_partial_decomposition_matches_full(n, d, n_shards):
+    """The sharded-consensus decomposition (DESIGN.md §3): per-shard partial
+    (dot, ‖w‖², ‖gw‖²) sums combine to the exact full-vector similarity."""
+    rng = np.random.default_rng(n * 100 + d)
+    pad = (-d) % n_shards
+    W = rng.normal(size=(n, d + pad)).astype(np.float32)
+    gw = rng.normal(size=(d + pad,)).astype(np.float32)
+    full = cosine_similarities(jnp.asarray(W), jnp.asarray(gw))
+    for m in range(n):
+        shards_w = np.split(W[m], n_shards)
+        shards_g = np.split(gw, n_shards)
+        terms = [partial_terms(jnp.asarray(a), jnp.asarray(b))
+                 for a, b in zip(shards_w, shards_g)]
+        summed = type(terms[0])(*(sum(t[i] for t in terms) for i in range(3)))
+        s = similarity_from_partials(summed)
+        np.testing.assert_allclose(float(s), float(full[m]), rtol=2e-5, atol=2e-6)
+
+
+def test_weighted_aggregation_favors_larger_dataset(rng):
+    W = np.stack([np.ones(8, np.float32), -np.ones(8, np.float32)])
+    gw = aggregate_global(jnp.asarray(W), jnp.asarray([90.0, 10.0]))
+    assert np.all(np.asarray(gw) > 0.5)

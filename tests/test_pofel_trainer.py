@@ -1,0 +1,114 @@
+"""In-graph PoFEL trainer (repro.fl.pofel_trainer): consensus math parity
+with core.model_eval, round mechanics, and outer-update modes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.model_eval import cosine_similarities, flatten_model
+from repro.fl import pofel_trainer as pt
+from repro.models.model_api import Model
+from repro.models.transformer import FwdOptions
+
+OPTS = FwdOptions(remat=False)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = Model(get_config("yi-6b").reduced())
+    cfg = pt.PoFELTrainConfig(n_clusters=4, inner_lr=1e-2)
+    state = pt.init_train_state(model, cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    C, B, S = 4, 2, 16
+    batch = {"tokens": jnp.asarray(rng.integers(0, 500, (C, B, S)), jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, 500, (C, B, S)), jnp.int32)}
+    return model, cfg, state, batch
+
+
+def test_local_step_diverges_clusters(setup):
+    model, cfg, state, batch = setup
+    new_params, losses = pt.local_step(model, state.cluster_params, batch, cfg,
+                                       OPTS)
+    assert losses.shape == (4,)
+    assert np.all(np.isfinite(np.asarray(losses)))
+    # different data per cluster ⇒ different replicas after one step
+    w0 = np.asarray(jax.tree.leaves(new_params)[3][0], np.float32)
+    w1 = np.asarray(jax.tree.leaves(new_params)[3][1], np.float32)
+    assert not np.array_equal(w0, w1)
+
+
+def test_similarities_match_core_model_eval(setup):
+    """The per-leaf partial-term decomposition equals flatten-and-dot."""
+    model, cfg, state, batch = setup
+    cluster_params, _ = pt.local_step(model, state.cluster_params, batch, cfg,
+                                      OPTS)
+    lambdas = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    gw = pt._weighted_global(cluster_params, lambdas)
+    sims = np.asarray(pt._similarities(cluster_params, gw))
+
+    W = jnp.stack([flatten_model(jax.tree.map(lambda t: t[c], cluster_params))
+                   for c in range(4)])
+    gw_flat = flatten_model(gw)
+    ref = np.asarray(cosine_similarities(W, gw_flat))
+    np.testing.assert_allclose(sims, np.clip(ref, -1, 1), atol=2e-3)
+
+
+def test_weighted_global_matches_eq1(setup):
+    model, cfg, state, batch = setup
+    cluster_params, _ = pt.local_step(model, state.cluster_params, batch, cfg,
+                                      OPTS)
+    lambdas = jnp.asarray([3.0, 1.0, 1.0, 1.0])
+    gw = pt._weighted_global(cluster_params, lambdas)
+    leaf = jax.tree.leaves(cluster_params)[3].astype(jnp.float32)
+    expect = jnp.einsum("c,c...->...", lambdas / lambdas.sum(), leaf)
+    got = jax.tree.leaves(gw)[3].astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect), atol=2e-2,
+                               rtol=2e-2)
+
+
+def test_pofel_round_redistributes_global(setup):
+    model, cfg, state, batch = setup
+    new_state, metrics = pt.pofel_round(model, state, batch,
+                                        jnp.ones((4,)), cfg, OPTS)
+    assert int(new_state.round) == 1
+    assert 0 <= int(metrics.leader) < 4
+    assert np.all(np.isfinite(np.asarray(metrics.similarities)))
+    # all clusters hold the new global after redistribution
+    for leaf in jax.tree.leaves(new_state.cluster_params):
+        a = np.asarray(leaf[0], np.float32)
+        for c in range(1, 4):
+            np.testing.assert_array_equal(a, np.asarray(leaf[c], np.float32))
+
+
+def test_rounds_decrease_loss(setup):
+    model, cfg, state, batch = setup
+    lambdas = jnp.ones((4,))
+    losses = []
+    for _ in range(5):
+        state, metrics = pt.pofel_round(model, state, batch, lambdas, cfg,
+                                        OPTS)
+        losses.append(float(jnp.mean(metrics.loss)))
+    assert losses[-1] < losses[0]
+
+
+def test_nesterov_outer_differs_from_sgd1(setup):
+    model, _, state, batch = setup
+    lam = jnp.ones((4,))
+    cfg1 = pt.PoFELTrainConfig(n_clusters=4, inner_lr=1e-2, outer="sgd1")
+    cfg2 = pt.PoFELTrainConfig(n_clusters=4, inner_lr=1e-2, outer="nesterov")
+    s1, _ = pt.pofel_round(model, state, batch, lam, cfg1, OPTS)
+    s2, _ = pt.pofel_round(model, state, batch, lam, cfg2, OPTS)
+    l1 = np.asarray(jax.tree.leaves(s1.global_params)[3], np.float32)
+    l2 = np.asarray(jax.tree.leaves(s2.global_params)[3], np.float32)
+    assert not np.array_equal(l1, l2)
+
+
+def test_train_step_no_consensus_keeps_divergence(setup):
+    model, cfg, state, batch = setup
+    s1, losses = pt.train_step(model, state, batch, cfg, OPTS)
+    leaf = jax.tree.leaves(s1.cluster_params)[3]
+    assert not np.array_equal(np.asarray(leaf[0], np.float32),
+                              np.asarray(leaf[1], np.float32))
+    assert int(s1.round) == 0  # round counter only advances at consensus

@@ -1,0 +1,109 @@
+"""HLO collective parser + trip-count scaling + analytic cost model."""
+
+import pytest
+
+from repro.configs import get_config
+from repro.configs.shapes import INPUT_SHAPES
+from repro.launch.costs import decode_cost, prefill_cost, train_cost
+from repro.launch.roofline import (CollectiveStats, parse_collectives,
+                                   _multipliers, _split_computations)
+from repro.models.model_api import Model
+
+SAMPLE_HLO = """
+HloModule jit_step
+
+%body.1 (param: (s32[], f32[4,16])) -> (s32[], f32[4,16]) {
+  %param = (s32[], f32[4,16]{1,0}) parameter(0)
+  %all-gather = f32[4,64]{0,1} all-gather(%copy), channel_id=1, dimensions={1}
+  %all-reduce.9 = f32[4,16]{1,0} all-reduce(%dot), channel_id=2
+}
+
+%cond.1 (param.1: (s32[], f32[4,16])) -> pred[] {
+  %constant.18 = s32[] constant(6)
+  ROOT %cmp = pred[] compare(%gte, %constant.18), direction=LT
+}
+
+ENTRY %main_spmd (p0: f32[6,32,16], p1: f32[4,64]) -> f32[] {
+  %while.8 = (s32[], f32[4,16]{1,0}) while(%tuple.4), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"6"}}
+  ROOT %all-reduce.1 = f32[] all-reduce(%wrapped_reduce), channel_id=4
+}
+"""
+
+
+def test_split_computations():
+    comps = _split_computations(SAMPLE_HLO)
+    assert "%body.1" in comps and "%cond.1" in comps
+    entries = [c for c, (is_entry, _) in comps.items() if is_entry]
+    assert entries == ["%main_spmd"]
+
+
+def test_trip_count_multipliers():
+    comps = _split_computations(SAMPLE_HLO)
+    mult = _multipliers(comps)
+    assert mult["%main_spmd"] == 1
+    assert mult["%body.1"] == 6
+
+
+def test_collective_bytes_scaled_by_trip_count():
+    stats = parse_collectives(SAMPLE_HLO)
+    # body: all-gather f32[4,64] = 1024B ×6 ; all-reduce f32[4,16] = 256B ×6
+    # entry: all-reduce f32[] = 4B ×1
+    assert stats.bytes_by_kind["all-gather"] == 1024 * 6
+    assert stats.bytes_by_kind["all-reduce"] == 256 * 6 + 4
+    assert stats.count_by_kind["all-gather"] == 6
+    assert stats.count_by_kind["all-reduce"] == 7
+
+
+def test_unscaled_parse():
+    stats = parse_collectives(SAMPLE_HLO, scale_by_trip_count=False)
+    assert stats.bytes_by_kind["all-gather"] == 1024
+    assert stats.count_by_kind["all-reduce"] == 2
+
+
+# ---------------------------------------------------------------------------
+# analytic cost model sanity
+# ---------------------------------------------------------------------------
+
+def test_train_flops_exceed_6nd():
+    """Train cost ≥ 6·N·D (the matmul floor) for a dense arch."""
+    model = Model(get_config("yi-6b"))
+    shape = INPUT_SHAPES["train_4k"]
+    c = train_cost(model, shape, n_clusters=8)
+    floor = 6.0 * model.n_params() * shape.global_batch * shape.seq_len
+    assert c.flops > floor
+    assert c.flops < 4 * floor      # remat+attention shouldn't 4x it
+
+
+def test_moe_train_flops_use_active_params():
+    dense = Model(get_config("yi-6b"))
+    moe = Model(get_config("phi3.5-moe-42b-a6.6b"))
+    assert moe.n_params() > 5 * moe.n_active_params() * 0.8
+    shape = INPUT_SHAPES["train_4k"]
+    # 42B-total MoE trains with ~6.6B active → flops comparable to yi-6b
+    c_moe = train_cost(moe, shape, 8)
+    c_dense = train_cost(dense, shape, 8)
+    assert c_moe.flops < 4 * c_dense.flops
+
+
+def test_decode_window_caps_attention():
+    full = Model(get_config("mistral-nemo-12b"))
+    win = Model(get_config("mistral-nemo-12b").with_sliding_window(8192))
+    shape = INPUT_SHAPES["long_500k"]
+    assert decode_cost(win, shape).flops < decode_cost(full, shape).flops
+
+
+def test_prefill_scales_with_seq():
+    model = Model(get_config("starcoder2-3b"))
+    s32 = INPUT_SHAPES["prefill_32k"]
+    c = prefill_cost(model, s32)
+    assert c.flops > 2.0 * model.n_params() * s32.global_batch * s32.seq_len
+
+
+def test_ssm_decode_cost_constant_in_seq():
+    """rwkv6 decode reads O(1) state — long_500k ≈ decode_32k per token."""
+    model = Model(get_config("rwkv6-1.6b"))
+    c_long = decode_cost(model, INPUT_SHAPES["long_500k"])
+    c_32k = decode_cost(model, INPUT_SHAPES["decode_32k"])
+    per_tok_long = c_long.hbm_bytes / 1
+    per_tok_32k = c_32k.hbm_bytes / 128
+    assert per_tok_long < per_tok_32k * 130     # no 16x seq blowup

@@ -1,0 +1,80 @@
+"""Deterministic pytree serialization + checkpointing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.core.serialization import deserialize_pytree_flat, serialize_pytree
+
+
+def _tree(rng):
+    return {"a": rng.normal(size=(3, 4)).astype(np.float32),
+            "nested": {"b": rng.integers(0, 9, size=(5,)).astype(np.int32),
+                       "c": rng.normal(size=()).astype(np.float64)}}
+
+
+def test_roundtrip(rng):
+    t = _tree(rng)
+    flat = deserialize_pytree_flat(serialize_pytree(t))
+    assert len(flat) == 3
+    by_suffix = {k.split("'")[-2]: v for k, v in flat.items()}
+    np.testing.assert_array_equal(by_suffix["a"], t["a"])
+    np.testing.assert_array_equal(by_suffix["b"], t["nested"]["b"])
+    np.testing.assert_array_equal(by_suffix["c"], t["nested"]["c"])
+
+
+def test_serialization_key_order_invariant(rng):
+    a = rng.normal(size=(2, 2)).astype(np.float32)
+    b = rng.normal(size=(3,)).astype(np.float32)
+    t1 = {"x": a, "y": b}
+    t2 = dict([("y", b), ("x", a)])      # different insertion order
+    assert serialize_pytree(t1) == serialize_pytree(t2)
+
+
+def test_serialization_sensitive_to_values(rng):
+    t = _tree(rng)
+    s1 = serialize_pytree(t)
+    t["a"][0, 0] += 1e-3
+    assert serialize_pytree(t) != s1
+
+
+@settings(deadline=None, max_examples=15)
+@given(n=st.integers(1, 30), m=st.integers(1, 7))
+def test_serialization_roundtrip_property(n, m):
+    rng = np.random.default_rng(n * 100 + m)
+    t = {"w": rng.normal(size=(n, m)).astype(np.float32)}
+    flat = deserialize_pytree_flat(serialize_pytree(t))
+    (arr,) = flat.values()
+    np.testing.assert_array_equal(arr, t["w"])
+
+
+def test_checkpoint_roundtrip(tmp_path, rng):
+    t = _tree(rng)
+    save_checkpoint(tmp_path, 7, t, metadata={"loss": 1.5})
+    assert latest_step(tmp_path) == 7
+    loaded = load_checkpoint(tmp_path, 7, t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_integrity_check(tmp_path, rng):
+    t = _tree(rng)
+    save_checkpoint(tmp_path, 1, t)
+    # corrupt the payload
+    import numpy as _np
+    path = tmp_path / "step_1.npz"
+    data = dict(_np.load(path))
+    data["leaf_0"] = data["leaf_0"] + 1.0
+    _np.savez(path, **data)
+    with pytest.raises(ValueError):
+        load_checkpoint(tmp_path, 1, t)
+
+
+def test_checkpoint_multiple_steps(tmp_path, rng):
+    t = _tree(rng)
+    for s in (1, 5, 3):
+        save_checkpoint(tmp_path, s, t)
+    assert latest_step(tmp_path) == 5
