@@ -51,8 +51,8 @@ def bench_runtime_split(rounds: int = 4) -> None:
         t_me = time.perf_counter()
         sizes = [float(c.data_size) for c in rt.clusters]
         rec = rt.consensus.run_round(models, sizes)   # full (incl. HCDS/chain)
-        from repro.fl.hfl_runtime import _unflatten_like
-        rt.global_params = _unflatten_like(rec.global_model, rt.global_params)
+        from repro.core.serialization import unflatten_pytree
+        rt.global_params = unflatten_pytree(rec.global_model, rt.global_params)
         t2 = time.perf_counter()
         fel_t += t1 - t0
         me_t += t_me - t1

@@ -1,65 +1,58 @@
-"""The complete BHFL workflow (paper §3.1, all four procedures):
+"""The complete BHFL workflow (paper §3.1, all four procedures), driven
+through the ``repro.api`` facade:
 
 1. Task Publication — a model owner publishes a learning task; nodes
    evaluate and accept (participation constraint).
 2. Incentive Mechanism — two-stage Stackelberg game fixes δ* and f_i*.
 3. Federated Edge Learning — clusters train with FedAvg.
 4. Global Aggregation + PoFEL consensus — HCDS, ME voting, BTSV tally,
-   block minting; leader + FEL rewards settle per round; the task
-   terminates at target loss or max rounds.
+   block minting (the five-phase pipeline of ``repro.core.phases``);
+   leader + FEL rewards settle per round; the task terminates at target
+   loss or max rounds.
+
+``api.run_bhfl`` composes all four; everything it returns (agreement,
+reward ledger, runtime/consensus/ledgers, per-round metrics) is inspected
+below.
 
 Run:  PYTHONPATH=src python examples/full_system.py
 """
 
-import numpy as np
-
-from repro.data.synthetic import make_mnist_like
-from repro.fl.hfl_runtime import BHFLConfig, BHFLRuntime
-from repro.fl.hierarchy import build_hierarchy
-from repro.fl.task import LearningTask, RewardLedger, negotiate_task
+from repro import api
 
 N_NODES = 6
 
 # --- 1. Task Publication ----------------------------------------------------
-task = LearningTask(
+task = api.LearningTask(
     task_id="mnist-mlp-0", publisher_id="model-owner-7",
     description="10-class digit classification, MLP 784-128-10",
     target_loss=1.55, max_rounds=12, block_reward=10.0)
 print(f"published task {task.task_id} (digest {task.digest()[:16]}…)")
 
-# --- 2. Incentive Mechanism ---------------------------------------------------
-rng = np.random.default_rng(0)
-gamma = {i: float(g) for i, g in enumerate(rng.uniform(0.008, 0.02, N_NODES))}
-mu = {i: 5.0 for i in range(N_NODES)}
-agreement = negotiate_task(task, list(range(N_NODES)), gamma, mu)
+# --- 2-4. negotiation + hierarchy + FEL/consensus rounds ---------------------
+run = api.run_bhfl(
+    task, model="mlp",
+    data=api.make_mnist_like(n_train=4000, n_test=600),
+    n_nodes=N_NODES, clients_per_node=4, fel_iterations=2,
+    on_round=lambda m: print(f"round {m.round:2d}  leader={m.leader_id}  "
+                             f"acc={m.test_accuracy:.3f}  "
+                             f"loss={m.test_loss:.3f}"))
+
+agreement = run.agreement
 print(f"negotiated: {len(agreement.participants)} participants, "
       f"δ*={agreement.delta_star:.0f}, "
       f"f*=[{min(agreement.f_star.values()):.1f}.."
       f"{max(agreement.f_star.values()):.1f}]")
-rewards = RewardLedger(agreement)
-
-# --- 3+4. FEL + consensus rounds until termination ---------------------------
-train, test = make_mnist_like(n_train=4000, n_test=600)
-cfg = BHFLConfig(n_nodes=N_NODES, clients_per_node=4, fel_iterations=2)
-runtime = BHFLRuntime(build_hierarchy(train, N_NODES, 4, "iid"), cfg, test)
-
-for k in range(task.max_rounds):
-    m = runtime.run_round()
-    rewards.settle_round(m.leader_id)
-    print(f"round {m.round:2d}  leader={m.leader_id}  "
-          f"acc={m.test_accuracy:.3f}  loss={m.test_loss:.3f}")
-    if m.test_loss <= task.target_loss:
-        print(f"target loss {task.target_loss} reached — task complete")
-        break
+if run.history[-1].test_loss <= task.target_loss:
+    print(f"target loss {task.target_loss} reached — task complete")
 
 # --- settlement ---------------------------------------------------------------
-print("\nchain verified:", runtime.consensus.ledgers[0].verify_chain(),
-      "height:", runtime.consensus.ledgers[0].height)
+print("\nchain verified:", run.chain_valid, "height:", run.chain_height)
 print("total rewards per node:",
-      {i: round(v, 1) for i, v in rewards.totals().items()})
-split = rewards.client_split(
-    agreement.participants[0],
+      {i: round(v, 1) for i, v in run.rewards.totals().items()})
+first = agreement.participants[0]
+split = run.rewards.client_split(
+    first,
     {c.client_id: float(c.data_size)
-     for c in runtime.clusters[agreement.participants[0]].clients})
-print(f"node {agreement.participants[0]} → client split "
+     for c in run.runtime.clusters[first].clients})
+print(f"node {first} → client split "
       f"(∝ contribution): {[round(v, 2) for v in split.values()]}")

@@ -1,8 +1,10 @@
-"""Quickstart: the PoFEL consensus in 60 lines.
+"""Quickstart: the PoFEL consensus in 60 lines, on the ``repro.api`` facade.
 
-Five BCFL nodes train tiny local models, run one full PoFEL round
-(HCDS commit/reveal → ME similarity voting → BTSV tally → block mint),
-and every ledger ends up with the same verified block.
+Five BCFL nodes train tiny local models, run one full PoFEL round through
+the five-phase pipeline (HCDS commit/reveal → ME similarity voting → vote
+submission → BTSV tally → block mint), and every ledger ends up with the
+same verified block. A phase hook watches the pipeline run — the API for
+experiments that tap individual protocol stages.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,7 +12,7 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import numpy as np
 
-from repro.core.consensus import PoFELConsensus
+from repro import api
 from repro.models.mlp import MLPConfig, mlp_init
 
 N_NODES = 5
@@ -27,8 +29,11 @@ models = [
 ]
 data_sizes = [100.0, 150.0, 120.0, 80.0, 200.0]   # |DS_m| per cluster
 
-# 2. One PoFEL consensus round (Alg. 1).
-consensus = PoFELConsensus(N_NODES)
+# 2. One PoFEL consensus round (Alg. 1) — five phases over a RoundContext.
+consensus = api.PoFELConsensus(N_NODES)
+print("phases:", [p.name for p in consensus.phases])
+consensus.add_phase_hook(
+    "*", lambda name, ctx: print(f"  ✓ {name}"), when="after")
 record = consensus.run_round(models, data_sizes)
 
 print("cosine similarities s_m:", np.round(record.similarities, 5))
@@ -44,3 +49,7 @@ print(f"block 0: leader={block.leader_id} "
       f"digest[gw]={block.global_model_digest[:16]}… "
       f"signature valid={block.verify_signature(consensus.public_keys[block.leader_id])}")
 print("all ledgers consistent ✓")
+
+# 4. The same protocol drives a full learning task in one call:
+#        api.run_bhfl(model="mlp" | "transformer" | "rwkv6", ...)
+#    — see examples/full_system.py and examples/bhfl_train.py.

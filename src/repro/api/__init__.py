@@ -1,0 +1,234 @@
+"""``repro.api`` — the single facade over the BHFL system (paper §3.1).
+
+One call composes all four procedures:
+
+    from repro import api
+
+    run = api.run_bhfl(
+        task=api.LearningTask("mnist-0", "owner-7", "digit classification",
+                              target_loss=1.5, max_rounds=10),
+        model="mlp",            # or "transformer" / "rwkv6" / a ModelAdapter
+        n_nodes=6, clients_per_node=4, fel_iterations=2)
+
+    run.history[-1].test_accuracy, run.rewards.totals(), run.chain_height
+
+Procedures composed (each also importable individually):
+
+1. Task Publication   — ``LearningTask`` announced on-chain (digest).
+2. Incentive          — Stackelberg negotiation (``negotiate_task``)
+                        fixes δ* and f_i*; a ``RewardLedger`` settles
+                        leader + FEL rewards every round.
+3. FEL hierarchy      — ``build_hierarchy`` partitions data into
+                        clusters of clients.
+4. Rounds             — ``BHFLRuntime`` drives FEL + the five-phase
+                        PoFEL consensus until target loss / max rounds.
+
+The model family is a ``ModelAdapter`` (``repro.fl.adapters``); data is
+auto-synthesized per family when not supplied (MNIST-like images for the
+MLP, zipf token streams for LMs).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# -- facade re-exports -------------------------------------------------------
+from repro.core.btsv import BTSVConfig
+from repro.core.consensus import ConsensusRecord, PoFELConsensus
+from repro.core.phases import (BlockMint, CommitReveal, ConsensusPhase,
+                               ModelEvaluation, RoundContext, Tally,
+                               VoteCollection, run_phases)
+from repro.data.synthetic import make_mnist_like
+from repro.data.tokens import make_token_dataset
+from repro.fl.adapters import (LMAdapter, MLPAdapter, ModelAdapter,
+                               make_adapter, rwkv6_adapter,
+                               transformer_adapter)
+from repro.fl.hfl_runtime import (AllNodesPlagiarizeError, BHFLConfig,
+                                  BHFLRuntime, RoundMetrics)
+from repro.fl.hierarchy import build_hierarchy
+from repro.fl.sharded_consensus import ShardedModelEvaluation
+from repro.fl.task import (LearningTask, RewardLedger, TaskAgreement,
+                           negotiate_task)
+
+__all__ = [
+    "run_bhfl", "BHFLRun",
+    "LearningTask", "TaskAgreement", "RewardLedger", "negotiate_task",
+    "BHFLConfig", "BHFLRuntime", "RoundMetrics", "build_hierarchy",
+    "ModelAdapter", "MLPAdapter", "LMAdapter", "make_adapter",
+    "transformer_adapter", "rwkv6_adapter",
+    "PoFELConsensus", "ConsensusRecord", "BTSVConfig",
+    "RoundContext", "ConsensusPhase", "CommitReveal", "ModelEvaluation",
+    "VoteCollection", "Tally", "BlockMint", "run_phases",
+    "ShardedModelEvaluation", "AllNodesPlagiarizeError",
+    "make_mnist_like", "make_token_dataset",
+]
+
+
+@dataclass
+class BHFLRun:
+    """Everything a finished (or stopped) BHFL task produced."""
+
+    task: LearningTask
+    agreement: TaskAgreement
+    rewards: RewardLedger
+    runtime: BHFLRuntime
+    history: List[RoundMetrics] = field(default_factory=list)
+
+    @property
+    def chain_height(self) -> int:
+        return self.runtime.consensus.ledgers[0].height
+
+    @property
+    def chain_valid(self) -> bool:
+        return all(led.verify_chain()
+                   for led in self.runtime.consensus.ledgers)
+
+    @property
+    def leader_counts(self) -> Dict[int, int]:
+        return self.runtime.leader_counts()
+
+
+def _default_task(max_rounds: int) -> LearningTask:
+    return LearningTask(
+        task_id="bhfl-task-0", publisher_id="model-owner-0",
+        description="BHFL learning task (repro.api default)",
+        target_loss=0.0, max_rounds=max_rounds, block_reward=10.0)
+
+
+def _default_data(adapter: ModelAdapter, seed: int) -> Tuple[Any, Any]:
+    """Per-family synthetic (train, test) when the caller brings no data."""
+    if isinstance(adapter, LMAdapter):
+        return make_token_dataset(n_seqs=256, seq_len=16,
+                                  vocab_size=adapter.arch.vocab_size,
+                                  seed=seed)
+    return make_mnist_like(n_train=4000, n_test=600, seed=seed)
+
+
+def run_bhfl(task: Optional[LearningTask] = None,
+             model: "str | ModelAdapter" = "mlp",
+             data: Optional[Tuple[Any, Any]] = None,
+             *,
+             cfg: Optional[BHFLConfig] = None,
+             n_nodes: Optional[int] = None,
+             clients_per_node: Optional[int] = None,
+             fel_iterations: Optional[int] = None,
+             rounds: Optional[int] = None,
+             distribution: str = "iid",
+             gamma: Optional[Dict[int, float]] = None,
+             mu: Optional[Dict[int, float]] = None,
+             seed: Optional[int] = None,
+             vote_hook: Optional[Callable] = None,
+             plagiarists: Sequence[int] = (),
+             on_round: Optional[Callable[[RoundMetrics], None]] = None,
+             ) -> BHFLRun:
+    """Publish → negotiate → build hierarchy → run PoFEL rounds → settle.
+
+    Args:
+        task: the on-chain task announcement; a default is synthesized
+            (``target_loss`` and ``max_rounds`` drive termination).
+        model: 'mlp' | 'transformer' | 'rwkv6' or a ``ModelAdapter``.
+            'mlp' trains with ``cfg``'s (paper §7.1) hyperparameters; the
+            named LM families use their own LM-tuned defaults — pass an
+            adapter instance (e.g. ``rwkv6_adapter(lr=...)``) to override.
+        data: (train, test) datasets matching the adapter's batch format;
+            synthesized per family when omitted.
+        cfg: full ``BHFLConfig`` override; otherwise one is built from
+            ``n_nodes``/``clients_per_node``/``fel_iterations``/``seed``
+            (defaults 6/4/2/0). Passing ``cfg`` together with a
+            conflicting sizing kwarg raises.
+        rounds: cap on rounds this call (default ``task.max_rounds``).
+        gamma/mu: per-node Stackelberg cost/weight parameters (defaults
+            match the paper's §7 ranges).
+        seed: governs data synthesis, partitioning, gamma draws, and model
+            init (one seed for the whole run).
+        vote_hook/plagiarists: adversary injection (paper §7.4 attacks).
+        on_round: callback fired with each round's ``RoundMetrics``.
+
+    Returns:
+        ``BHFLRun`` with the negotiated agreement, settled rewards, the
+        runtime (consensus, ledgers, phases), and per-round metrics.
+    """
+    cfg_given = cfg is not None
+    if cfg is None:
+        cfg = BHFLConfig(n_nodes=n_nodes if n_nodes is not None else 6,
+                         clients_per_node=clients_per_node
+                         if clients_per_node is not None else 4,
+                         fel_iterations=fel_iterations
+                         if fel_iterations is not None else 2,
+                         seed=seed if seed is not None else 0)
+    else:
+        for kwarg, val, cfg_val in (
+                ("n_nodes", n_nodes, cfg.n_nodes),
+                ("clients_per_node", clients_per_node, cfg.clients_per_node),
+                ("fel_iterations", fel_iterations, cfg.fel_iterations),
+                ("seed", seed, cfg.seed)):
+            if val is not None and val != cfg_val:
+                raise ValueError(
+                    f"{kwarg}={val} conflicts with cfg.{kwarg}={cfg_val}; "
+                    f"set it on cfg or drop the kwarg")
+    n_nodes = cfg.n_nodes
+    clients_per_node = cfg.clients_per_node
+    seed = cfg.seed     # one seed governs data, gamma draws, and init
+
+    # resolve the adapter. BHFLConfig's training fields are the paper's
+    # MLP hyperparameters, so they drive the MLP adapter only; named LM
+    # adapters keep their own LM-tuned defaults (customize by passing an
+    # adapter instance) and size their vocab from the caller's token data.
+    if model == "mlp":
+        adapter: ModelAdapter = cfg.default_adapter()
+    elif isinstance(model, str):
+        lm_kwargs: Dict[str, Any] = {}
+        if data is not None and hasattr(data[0], "vocab_size"):
+            lm_kwargs["vocab_size"] = data[0].vocab_size
+        adapter = make_adapter(model, **lm_kwargs)
+    else:
+        adapter = make_adapter(model)
+    if (isinstance(adapter, LMAdapter) and data is not None
+            and getattr(data[0], "vocab_size", 0) > adapter.arch.vocab_size):
+        raise ValueError(
+            f"data vocab_size {data[0].vocab_size} exceeds the adapter's "
+            f"{adapter.arch.vocab_size} — token ids would clamp silently")
+    max_rounds = rounds if rounds is not None else (
+        task.max_rounds if task is not None else 10)
+    if task is None:
+        task = _default_task(max_rounds)
+
+    # 1-2. publication + incentive negotiation
+    rng = np.random.default_rng(seed)
+    node_ids = list(range(n_nodes))
+    if gamma is None:
+        gamma = {i: float(g)
+                 for i, g in enumerate(rng.uniform(0.008, 0.02, n_nodes))}
+    if mu is None:
+        mu = {i: 5.0 for i in node_ids}
+    agreement = negotiate_task(task, node_ids, gamma, mu)
+    rewards = RewardLedger(agreement)
+
+    # 3. hierarchy over (possibly synthesized) data
+    if data is None:
+        data = _default_data(adapter, seed)
+    train, test = data
+    if distribution != "iid" and not hasattr(train, "n_classes"):
+        raise ValueError(
+            f"distribution={distribution!r} needs labelled image data "
+            f"(.y/.n_classes); {type(train).__name__} workloads support "
+            f"'iid' only")
+    clusters = build_hierarchy(train, n_nodes, clients_per_node,
+                               distribution, seed=seed)
+
+    # 4. FEL + consensus rounds until termination
+    runtime = BHFLRuntime(clusters, cfg, test, adapter=adapter)
+    runtime.vote_hook = vote_hook
+    runtime.plagiarists = set(plagiarists)
+    run = BHFLRun(task, agreement, rewards, runtime, runtime.history)
+    for _ in range(min(max_rounds, task.max_rounds)):
+        m = runtime.run_round()
+        rewards.settle_round(m.leader_id)
+        if on_round is not None:
+            on_round(m)
+        if test is not None and m.test_loss <= task.target_loss:
+            break
+    return run

@@ -4,7 +4,8 @@
 - model_eval — ME: weighted aggregation + cosine-similarity voting
 - btsv — Bayesian Truth Serum-based weighted vote tallying
 - incentive — two-stage Stackelberg game solver
-- consensus — the PoFEL round orchestrator (Alg. 1)
+- phases — Alg. 1 as five composable protocol stages + RoundContext
+- consensus — the PoFEL round orchestrator composing the phases
 
 Submodule symbols are re-exported lazily (PEP 562) because the blockchain
 package depends on ``repro.core.crypto`` while ``repro.core.consensus``
@@ -22,6 +23,13 @@ _EXPORTS = {
     "NodeParams": "repro.core.incentive", "PublisherParams": "repro.core.incentive",
     "StackelbergSolution": "repro.core.incentive",
     "stackelberg_equilibrium": "repro.core.incentive",
+    "RoundContext": "repro.core.phases", "ConsensusPhase": "repro.core.phases",
+    "CommitReveal": "repro.core.phases", "ModelEvaluation": "repro.core.phases",
+    "VoteCollection": "repro.core.phases", "Tally": "repro.core.phases",
+    "BlockMint": "repro.core.phases", "run_phases": "repro.core.phases",
+    "flatten_pytree": "repro.core.serialization",
+    "unflatten_pytree": "repro.core.serialization",
+    "serialize_pytree": "repro.core.serialization",
     "MEResult": "repro.core.model_eval", "aggregate_global": "repro.core.model_eval",
     "cosine_similarities": "repro.core.model_eval",
     "flatten_model": "repro.core.model_eval",

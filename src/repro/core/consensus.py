@@ -9,25 +9,29 @@ One consensus round among N BCFL nodes, given their FEL models W(k):
   5. leader mints + signs the new block; every node verifies and appends
 
 ``PoFELConsensus`` is the host-side orchestrator used by the paper-faithful
-FL runtime and the benchmarks. The in-graph sharded variant used by the
-large-model training path lives in ``repro.fl.sharded_consensus``.
+FL runtime and the benchmarks. It composes the five protocol phases from
+``repro.core.phases`` (CommitReveal → ModelEvaluation → VoteCollection →
+Tally → BlockMint) over a typed ``RoundContext``; swap or hook individual
+phases instead of overriding ``run_round``. The in-graph sharded ME used
+by the large-model training path lives in ``repro.fl.sharded_consensus``
+(a drop-in replacement for the ``ModelEvaluation`` phase).
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.blockchain.block import Block, block_hash
+from repro.blockchain.block import Block
 from repro.blockchain.ledger import Ledger
-from repro.blockchain.smart_contract import VoteSubmission, VoteTallyContract
-from repro.core import crypto
+from repro.blockchain.smart_contract import VoteTallyContract
 from repro.core.btsv import BTSVConfig, BTSVResult
-from repro.core.hcds import HCDSNode, run_hcds_round
-from repro.core.model_eval import model_evaluation_pytrees
-from repro.core.serialization import serialize_pytree
+from repro.core.hcds import HCDSNode
+from repro.core.phases import (BlockMint, CommitReveal, ConsensusPhase,
+                               ModelEvaluation, PhaseHook, RoundContext,
+                               Tally, VoteCollection, VoteHook, run_phases)
 
 
 @dataclass
@@ -43,87 +47,96 @@ class ConsensusRecord:
 
 
 class PoFELConsensus:
-    """Full-system consensus driver over N co-simulated BCFL nodes."""
+    """Full-system consensus driver over N co-simulated BCFL nodes.
 
-    def __init__(self, n_nodes: int, btsv_cfg: BTSVConfig = BTSVConfig(),
+    The protocol pipeline is ``self.phases`` — a list of
+    :class:`~repro.core.phases.ConsensusPhase` objects executed in order
+    over a shared :class:`~repro.core.phases.RoundContext`. Experiments
+    customize behaviour three ways, from least to most invasive:
+
+    * ``vote_hook=`` on :meth:`run_round` — per-node vote manipulation;
+    * :meth:`add_phase_hook` — observe/tamper context before/after a phase;
+    * :meth:`replace_phase` — swap an implementation (e.g. the sharded
+      in-graph ME from ``repro.fl.sharded_consensus``).
+    """
+
+    # re-exported for back-compat with pre-phase callers
+    VoteHook = VoteHook
+
+    def __init__(self, n_nodes: int, btsv_cfg: Optional[BTSVConfig] = None,
                  g_max: float = 0.99, nonce_len: int = 32):
+        # None-default instead of a module-level BTSVConfig() instance in
+        # the signature (BTSVConfig is an immutable NamedTuple, so sharing
+        # was harmless — this is signature hygiene, not a state fix)
+        btsv_cfg = BTSVConfig() if btsv_cfg is None else btsv_cfg
         self.n_nodes = n_nodes
+        self.btsv_cfg = btsv_cfg
         self.g_max = g_max
         self.hcds_nodes = [HCDSNode(i, nonce_len=nonce_len) for i in range(n_nodes)]
         self.public_keys = {n.node_id: n.keypair.public_key for n in self.hcds_nodes}
         self.contract = VoteTallyContract(n_nodes, btsv_cfg)
         self.ledgers = [Ledger(i) for i in range(n_nodes)]
         self.round = 0
+        self.phases: List[ConsensusPhase] = self.default_phases()
+        self._before_hooks: Dict[str, List[PhaseHook]] = {}
+        self._after_hooks: Dict[str, List[PhaseHook]] = {}
 
-    # -- vote manipulation hook (adversary injection for experiments) -------
-    VoteHook = Callable[[int, int, np.ndarray], tuple[int, np.ndarray]]
+    def default_phases(self) -> List[ConsensusPhase]:
+        """Alg. 1 as five composable stages."""
+        return [
+            CommitReveal(self.hcds_nodes, self.public_keys),
+            ModelEvaluation(),
+            VoteCollection(self.contract),
+            Tally(self.contract),
+            BlockMint(self.ledgers, self.hcds_nodes, self.public_keys,
+                      self.contract),
+        ]
 
+    # -- phase plumbing ------------------------------------------------------
+    def add_phase_hook(self, phase: str, fn: PhaseHook,
+                       when: str = "after") -> None:
+        """Register ``fn(phase_name, ctx)`` before/after phase ``phase``
+        (``"*"`` fires around every phase)."""
+        if when not in ("before", "after"):
+            raise ValueError(f"when must be 'before' or 'after', got {when!r}")
+        hooks = self._before_hooks if when == "before" else self._after_hooks
+        hooks.setdefault(phase, []).append(fn)
+
+    def replace_phase(self, name: str, phase: ConsensusPhase) -> None:
+        """Swap the pipeline stage whose ``name`` matches (e.g. replace
+        ``model_evaluation`` with the sharded in-graph variant)."""
+        for i, p in enumerate(self.phases):
+            if p.name == name:
+                self.phases[i] = phase
+                return
+        raise KeyError(f"no phase named {name!r} in pipeline "
+                       f"{[p.name for p in self.phases]}")
+
+    def get_phase(self, name: str) -> ConsensusPhase:
+        for p in self.phases:
+            if p.name == name:
+                return p
+        raise KeyError(f"no phase named {name!r}")
+
+    # -- one round -----------------------------------------------------------
     def run_round(self, models: Sequence[Any], data_sizes: Sequence[float],
-                  vote_hook: Optional["PoFELConsensus.VoteHook"] = None,
+                  vote_hook: Optional[VoteHook] = None,
                   ) -> ConsensusRecord:
         """Alg. 1 for one round k; ``models`` is the list of FEL pytrees."""
-        k = self.round
-        n = self.n_nodes
-
-        # Line 2: HCDS at every node
-        reveal_results = run_hcds_round(self.hcds_nodes, models, k, self.public_keys)
-        rejected: Dict[int, str] = {}
-        for recv, senders in reveal_results.items():
-            for sender, res in senders.items():
-                if not res.accepted and sender not in rejected:
-                    rejected[sender] = res.reason
-
-        # Line 3: ME at every node — all honest nodes compute identical
-        # (gw, sims); we compute once and derive per-node votes.
-        me = model_evaluation_pytrees(list(models), list(data_sizes), g_max=self.g_max)
-        sims = np.asarray(me.similarities)
-        honest_vote = int(np.argmax(sims))
-
-        # Line 4: submissions (vote_hook lets experiments model malicious votes)
-        votes = np.empty(n, np.int64)
-        for i in range(n):
-            vote_i = honest_vote
-            preds_i = np.full((n,), (1.0 - self.g_max) / (n - 1), np.float32)
-            preds_i[vote_i] = self.g_max
-            if vote_hook is not None:
-                vote_i, preds_i = vote_hook(i, vote_i, preds_i)
-            votes[i] = vote_i
-            self.contract.submit(VoteSubmission(i, k, int(vote_i), preds_i))
-
-        # Line 5: BTSV tally in the smart contract
-        btsv = self.contract.tally(k)
-        leader = int(btsv.leader)
-
-        # Lines 6-7: leader mints the block; all nodes verify + append
-        model_digests = {
-            i: crypto.sha256_digest(serialize_pytree(m)).hex()
-            for i, m in enumerate(models)
-        }
-        gw_digest = crypto.sha256_digest(
-            np.asarray(me.global_model, np.float32).tobytes()).hex()
-        block = Block(
-            index=self.ledgers[leader].height,
-            round=k,
-            leader_id=leader,
-            prev_hash=self.ledgers[leader].head_hash,
-            model_digests=model_digests,
-            global_model_digest=gw_digest,
-            votes={i: int(votes[i]) for i in range(n)},
-            vote_weights={i: float(btsv.weights[i]) for i in range(n)},
-            advotes={j: float(btsv.advotes[j]) for j in range(n)},
-            extra={"rejected": {str(i): r for i, r in rejected.items()}},
-        ).signed(self.hcds_nodes[leader].keypair)
-
-        def retally(b: Block) -> int:
-            res = self.contract.result(b.round)
-            return int(res.leader) if res is not None else -1
-
-        for ledger in self.ledgers:
-            ledger.append(block, leader_pk=self.public_keys[leader], retally=retally)
-
+        ctx = RoundContext(
+            round=self.round,
+            models=list(models),
+            data_sizes=[float(s) for s in data_sizes],
+            n_nodes=self.n_nodes,
+            g_max=self.g_max,
+            vote_hook=vote_hook,
+        )
+        run_phases(self.phases, ctx,
+                   before=self._before_hooks, after=self._after_hooks)
         self.round += 1
-        return ConsensusRecord(k, leader, sims, votes, btsv, block,
-                               np.asarray(me.global_model), rejected)
+        return ConsensusRecord(ctx.round, ctx.leader, ctx.similarities,
+                               ctx.votes, ctx.btsv, ctx.block,
+                               ctx.global_model, ctx.rejected)
 
     @property
     def chain(self) -> List[Block]:

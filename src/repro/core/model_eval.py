@@ -36,10 +36,13 @@ class MEResult(NamedTuple):
 
 
 def flatten_model(tree: Any) -> jax.Array:
-    """Deterministic (sorted key-path) flattening of a parameter pytree."""
-    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
-    paths = sorted(paths, key=lambda kv: jax.tree_util.keystr(kv[0]))
-    return jnp.concatenate([jnp.ravel(leaf).astype(jnp.float32) for _, leaf in paths])
+    """Deterministic (sorted key-path) flattening of a parameter pytree.
+
+    Alias of :func:`repro.core.serialization.flatten_pytree` — the single
+    canonical flatten/unflatten roundtrip lives in ``core.serialization``.
+    """
+    from repro.core.serialization import flatten_pytree
+    return flatten_pytree(tree)
 
 
 def aggregate_global(W: jax.Array, data_sizes: jax.Array) -> jax.Array:

@@ -1,0 +1,235 @@
+"""Phase-based PoFEL protocol API (paper §4, Alg. 1).
+
+Alg. 1 is an explicit five-phase protocol; each phase is a composable
+object operating on a shared :class:`RoundContext`:
+
+  1. :class:`CommitReveal`     — HCDS commit/reveal model exchange (§4.1)
+  2. :class:`ModelEvaluation`  — Eq. 1 aggregation + Eq. 2 similarity (§4.2)
+  3. :class:`VoteCollection`   — per-node vote submission to the contract
+  4. :class:`Tally`            — BTSV weighted tally, leader election (§4.3)
+  5. :class:`BlockMint`        — leader mints + signs; all ledgers append
+
+``PoFELConsensus`` (``repro.core.consensus``) composes the default
+pipeline; experiments, attacks, and benchmarks hook individual phases —
+either by replacing a phase object in ``consensus.phases`` (e.g. the
+sharded in-graph ME from ``repro.fl.sharded_consensus``) or by
+registering before/after callbacks with ``consensus.add_phase_hook`` —
+instead of monkey-patching a monolithic ``run_round``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.blockchain.block import Block
+from repro.blockchain.ledger import Ledger
+from repro.blockchain.smart_contract import VoteSubmission, VoteTallyContract
+from repro.core import crypto
+from repro.core.btsv import BTSVResult
+from repro.core.hcds import HCDSNode, run_hcds_round
+from repro.core.model_eval import MEResult, model_evaluation_pytrees
+from repro.core.serialization import serialize_pytree
+
+# (node_id, honest_vote, honest_predictions) -> (vote, predictions)
+VoteHook = Callable[[int, int, np.ndarray], tuple[int, np.ndarray]]
+# callback fired around a phase: fn(phase_name, ctx)
+PhaseHook = Callable[[str, "RoundContext"], None]
+
+
+@dataclass
+class RoundContext:
+    """Typed state flowing through one consensus round's phases.
+
+    Inputs (set by the driver) come first; each later field is written by
+    the phase named in its comment and read by the phases after it.
+    """
+
+    round: int
+    models: List[Any]                    # W(k) — one parameter pytree per node
+    data_sizes: List[float]              # |DS_m| per cluster
+    n_nodes: int
+    g_max: float = 0.99
+    vote_hook: Optional[VoteHook] = None
+
+    # CommitReveal
+    rejected: Dict[int, str] = field(default_factory=dict)
+    # ModelEvaluation (or a drop-in replacement like the sharded ME)
+    evaluation: Optional[MEResult] = None
+    # VoteCollection
+    votes: Optional[np.ndarray] = None         # (N,) int64
+    predictions: Optional[np.ndarray] = None   # (N, N) float32, rows sum to 1
+    # Tally
+    btsv: Optional[BTSVResult] = None
+    leader: Optional[int] = None
+    # BlockMint
+    block: Optional[Block] = None
+    # free-form scratch space for experiment hooks
+    extra: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def similarities(self) -> np.ndarray:
+        if self.evaluation is None:
+            raise RuntimeError("similarities requested before ModelEvaluation ran")
+        return np.asarray(self.evaluation.similarities)
+
+    @property
+    def global_model(self) -> np.ndarray:
+        if self.evaluation is None:
+            raise RuntimeError("global model requested before ModelEvaluation ran")
+        return np.asarray(self.evaluation.global_model)
+
+
+class ConsensusPhase:
+    """One stage of Alg. 1. Subclasses read/write ``RoundContext`` fields;
+    ``name`` keys phase hooks and pipeline surgery (``replace_phase``)."""
+
+    name: str = "phase"
+
+    def run(self, ctx: RoundContext) -> None:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"<{type(self).__name__} name={self.name!r}>"
+
+
+class CommitReveal(ConsensusPhase):
+    """Alg. 1 line 2 — HCDS at every node (commit, verify, reveal, verify)."""
+
+    name = "commit_reveal"
+
+    def __init__(self, nodes: Sequence[HCDSNode],
+                 public_keys: Dict[int, crypto.Point]):
+        self.nodes = list(nodes)
+        self.public_keys = public_keys
+
+    def run(self, ctx: RoundContext) -> None:
+        reveal_results = run_hcds_round(self.nodes, ctx.models, ctx.round,
+                                        self.public_keys)
+        for recv, senders in reveal_results.items():
+            for sender, res in senders.items():
+                if not res.accepted and sender not in ctx.rejected:
+                    ctx.rejected[sender] = res.reason
+
+
+class ModelEvaluation(ConsensusPhase):
+    """Alg. 1 line 3 — ME at every node. All honest nodes compute identical
+    (gw, sims); computed once here, per-node votes derived in the next phase."""
+
+    name = "model_evaluation"
+
+    def run(self, ctx: RoundContext) -> None:
+        ctx.evaluation = model_evaluation_pytrees(
+            list(ctx.models), list(ctx.data_sizes), g_max=ctx.g_max)
+
+
+class VoteCollection(ConsensusPhase):
+    """Alg. 1 line 4 — every node submits (vote, predictions) to the
+    vote-tally contract. ``ctx.vote_hook`` lets experiments model malicious
+    voters (bribery / random attacks, §7.4)."""
+
+    name = "vote_collection"
+
+    def __init__(self, contract: VoteTallyContract):
+        self.contract = contract
+
+    def run(self, ctx: RoundContext) -> None:
+        if ctx.evaluation is None:
+            raise RuntimeError("VoteCollection requires a prior ModelEvaluation")
+        n = ctx.n_nodes
+        sims = np.asarray(ctx.evaluation.similarities)
+        honest_vote = int(np.argmax(sims))
+        votes = np.empty(n, np.int64)
+        preds = np.empty((n, n), np.float32)
+        for i in range(n):
+            vote_i = honest_vote
+            preds_i = np.full((n,), (1.0 - ctx.g_max) / (n - 1), np.float32)
+            preds_i[vote_i] = ctx.g_max
+            if ctx.vote_hook is not None:
+                vote_i, preds_i = ctx.vote_hook(i, vote_i, preds_i)
+            votes[i] = vote_i
+            preds[i] = preds_i
+            self.contract.submit(
+                VoteSubmission(i, ctx.round, int(vote_i), preds_i))
+        ctx.votes = votes
+        ctx.predictions = preds
+
+
+class Tally(ConsensusPhase):
+    """Alg. 1 line 5 — BTSV tally inside the smart contract; elects e*(k)."""
+
+    name = "tally"
+
+    def __init__(self, contract: VoteTallyContract):
+        self.contract = contract
+
+    def run(self, ctx: RoundContext) -> None:
+        ctx.btsv = self.contract.tally(ctx.round)
+        ctx.leader = int(ctx.btsv.leader)
+
+
+class BlockMint(ConsensusPhase):
+    """Alg. 1 lines 6-7 — the leader mints and signs the block; every node
+    verifies (signature + local BTSV re-tally) and appends to its ledger."""
+
+    name = "block_mint"
+
+    def __init__(self, ledgers: Sequence[Ledger], nodes: Sequence[HCDSNode],
+                 public_keys: Dict[int, crypto.Point],
+                 contract: VoteTallyContract):
+        self.ledgers = list(ledgers)
+        self.nodes = list(nodes)
+        self.public_keys = public_keys
+        self.contract = contract
+
+    def run(self, ctx: RoundContext) -> None:
+        if ctx.leader is None or ctx.btsv is None or ctx.votes is None:
+            raise RuntimeError("BlockMint requires a prior Tally")
+        n = ctx.n_nodes
+        leader = ctx.leader
+        model_digests = {
+            i: crypto.sha256_digest(serialize_pytree(m)).hex()
+            for i, m in enumerate(ctx.models)
+        }
+        gw_digest = crypto.sha256_digest(
+            np.asarray(ctx.global_model, np.float32).tobytes()).hex()
+        block = Block(
+            index=self.ledgers[leader].height,
+            round=ctx.round,
+            leader_id=leader,
+            prev_hash=self.ledgers[leader].head_hash,
+            model_digests=model_digests,
+            global_model_digest=gw_digest,
+            votes={i: int(ctx.votes[i]) for i in range(n)},
+            vote_weights={i: float(ctx.btsv.weights[i]) for i in range(n)},
+            advotes={j: float(ctx.btsv.advotes[j]) for j in range(n)},
+            extra={"rejected": {str(i): r for i, r in ctx.rejected.items()}},
+        ).signed(self.nodes[leader].keypair)
+
+        def retally(b: Block) -> int:
+            res = self.contract.result(b.round)
+            return int(res.leader) if res is not None else -1
+
+        for ledger in self.ledgers:
+            ledger.append(block, leader_pk=self.public_keys[leader],
+                          retally=retally)
+        ctx.block = block
+
+
+def run_phases(phases: Sequence[ConsensusPhase], ctx: RoundContext,
+               before: Optional[Dict[str, List[PhaseHook]]] = None,
+               after: Optional[Dict[str, List[PhaseHook]]] = None,
+               ) -> RoundContext:
+    """Drive ``ctx`` through ``phases``, firing registered hooks around
+    each phase (keyed by phase name; ``"*"`` matches every phase)."""
+    before = before or {}
+    after = after or {}
+    for phase in phases:
+        for fn in before.get(phase.name, []) + before.get("*", []):
+            fn(phase.name, ctx)
+        phase.run(ctx)
+        for fn in after.get(phase.name, []) + after.get("*", []):
+            fn(phase.name, ctx)
+    return ctx

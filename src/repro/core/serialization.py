@@ -3,6 +3,11 @@
 HCDS commits to H(nonce || model); the model is a pytree of arrays, so we
 need a canonical byte encoding that is stable across processes: sorted
 key-paths, dtype/shape headers, and raw little-endian array bytes.
+
+The same sorted-keypath ordering also defines the canonical flat-vector
+view of a model (``flatten_pytree`` / ``unflatten_pytree``) used by ME,
+the sharded consensus, and every ``ModelAdapter`` — keeping the byte
+encoding and the vector encoding in one module guarantees they agree.
 """
 
 from __future__ import annotations
@@ -11,6 +16,7 @@ import struct
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 _MAGIC = b"RPR0"
@@ -20,14 +26,52 @@ def _keystr(path) -> str:
     return jax.tree_util.keystr(path)
 
 
+def _sorted_leaves(tree: Any) -> list:
+    """(path, leaf) pairs in canonical sorted-keypath order."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return sorted(leaves, key=lambda kv: _keystr(kv[0]))
+
+
+def flatten_pytree(tree: Any) -> jax.Array:
+    """Canonical (sorted key-path) float32 flat vector of a parameter pytree.
+
+    This ordering matches :func:`serialize_pytree`, so the HCDS commitment
+    and the ME similarity computation see the same vector.
+    """
+    return jnp.concatenate(
+        [jnp.ravel(leaf).astype(jnp.float32) for _, leaf in _sorted_leaves(tree)])
+
+
+def unflatten_pytree(flat: Any, template: Any) -> Any:
+    """Inverse of :func:`flatten_pytree`: rebuild a pytree shaped/dtyped
+    like ``template`` from a flat vector (sorted-keypath order)."""
+    flat = np.asarray(flat)
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    sizes = [int(np.prod(leaf.shape, dtype=np.int64)) if leaf.shape else 1
+             for _, leaf in paths]
+    if sum(sizes) != flat.size:
+        raise ValueError(
+            f"flat vector has {flat.size} elements; template needs {sum(sizes)}")
+    order = sorted(range(len(paths)), key=lambda i: _keystr(paths[i][0]))
+    leaves = [None] * len(paths)
+    off = 0
+    for i in order:
+        leaf = paths[i][1]
+        n = sizes[i]
+        chunk = flat[off:off + n].reshape(leaf.shape)
+        leaves[i] = jnp.asarray(chunk, dtype=leaf.dtype)
+        off += n
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
 def serialize_pytree(tree: Any) -> bytes:
     """Canonical bytes of a pytree of arrays/scalars.
 
     Layout: MAGIC | n_leaves | for each leaf (sorted by keypath):
     len(path) path | len(dtype) dtype | ndim shape... | nbytes raw-bytes.
     """
-    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
-    leaves = sorted(leaves, key=lambda kv: _keystr(kv[0]))
+    leaves = _sorted_leaves(tree)
     out = [_MAGIC, struct.pack("<I", len(leaves))]
     for path, leaf in leaves:
         arr = np.asarray(leaf)

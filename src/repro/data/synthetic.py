@@ -28,6 +28,8 @@ class SyntheticImageDataset:
         return SyntheticImageDataset(self.x[idx], self.y[idx], self.n_classes)
 
     def batches(self, batch_size: int, seed: int = 0):
+        if batch_size <= 0:
+            raise ValueError(f"batch_size must be positive, got {batch_size}")
         rng = np.random.default_rng(seed)
         order = rng.permutation(len(self))
         for s in range(0, len(self) - batch_size + 1, batch_size):

@@ -1,7 +1,13 @@
+from repro.fl.adapters import (EvalResult, LMAdapter, MLPAdapter, ModelAdapter,
+                               make_adapter, rwkv6_adapter, transformer_adapter)
 from repro.fl.client import Client, local_train
 from repro.fl.fedavg import fedavg
 from repro.fl.hierarchy import FELCluster, build_hierarchy
-from repro.fl.hfl_runtime import BHFLConfig, BHFLRuntime, RoundMetrics
+from repro.fl.hfl_runtime import (AllNodesPlagiarizeError, BHFLConfig,
+                                  BHFLRuntime, RoundMetrics)
 
 __all__ = ["Client", "local_train", "fedavg", "FELCluster", "build_hierarchy",
-           "BHFLConfig", "BHFLRuntime", "RoundMetrics"]
+           "BHFLConfig", "BHFLRuntime", "RoundMetrics",
+           "AllNodesPlagiarizeError",
+           "ModelAdapter", "MLPAdapter", "LMAdapter", "EvalResult",
+           "make_adapter", "transformer_adapter", "rwkv6_adapter"]

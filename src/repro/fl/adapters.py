@@ -1,0 +1,235 @@
+"""Model adapters — the pluggable-workload boundary of the BHFL runtime.
+
+The paper's experiments use one MNIST MLP, but nothing in PoFEL depends on
+the model family: HCDS commits to bytes, ME flattens to a vector, and the
+chain stores digests. ``ModelAdapter`` captures exactly the contract the
+runtime needs — init / train-step / eval / flatten / unflatten — so
+``BHFLRuntime`` drives an MLP, a transformer, or an RWKV6 LM through the
+identical consensus path.
+
+Adapters:
+
+* :class:`MLPAdapter`   — the paper-faithful MNIST MLP (§7.1).
+* :class:`LMAdapter`    — any ``repro.models.model_api.Model`` family over
+  token data; :func:`transformer_adapter` and :func:`rwkv6_adapter` build
+  reduced-scale instances that run on CPU.
+
+Flatten/unflatten share the canonical sorted-keypath roundtrip in
+``repro.core.serialization``, so model bytes, ME vectors, and checkpoint
+digests always agree.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, NamedTuple, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.serialization import flatten_pytree, unflatten_pytree
+from repro.fl.client import Client
+from repro.models.config import ArchConfig
+from repro.models.mlp import MLPConfig, mlp_accuracy, mlp_init, mlp_loss
+from repro.models.model_api import Model
+from repro.optim.sgd import sgd_init, sgd_update
+
+
+class EvalResult(NamedTuple):
+    accuracy: float
+    loss: float
+
+
+@runtime_checkable
+class ModelAdapter(Protocol):
+    """What ``BHFLRuntime`` needs from a workload. All methods are pure in
+    params; the adapter owns hyperparameters and batch semantics.
+
+    ``flatten``/``unflatten`` are not free to choose any self-consistent
+    layout: the consensus computes gw(k) in the CANONICAL sorted-keypath
+    order (``core.serialization.flatten_pytree`` — the same order HCDS
+    commits to) and the runtime adopts it via ``adapter.unflatten``, so
+    both must implement that layout. Inherit them from the provided base
+    (as :class:`MLPAdapter`/:class:`LMAdapter` do) unless you have a
+    reason to reimplement; ``BHFLRuntime`` checks the contract at init.
+    """
+
+    name: str
+
+    def init(self, key: jax.Array) -> Any:
+        """Fresh parameter pytree."""
+        ...
+
+    def local_train(self, params: Any, client: Client, *,
+                    seed: int = 0) -> tuple[Any, float]:
+        """One client's local training pass; returns (params, last loss)."""
+        ...
+
+    def evaluate(self, params: Any, dataset: Any) -> EvalResult:
+        """(accuracy, loss) of ``params`` on a held-out dataset."""
+        ...
+
+    def flatten(self, params: Any) -> jax.Array:
+        """Canonical flat float32 vector (ME / consensus layout)."""
+        ...
+
+    def unflatten(self, flat: Any, template: Any) -> Any:
+        """Inverse of :meth:`flatten`, shaped/dtyped like ``template``."""
+        ...
+
+
+class _SerializationFlatten:
+    """Shared flatten/unflatten via the canonical serialization roundtrip."""
+
+    def flatten(self, params: Any) -> jax.Array:
+        return flatten_pytree(params)
+
+    def unflatten(self, flat: Any, template: Any) -> Any:
+        return unflatten_pytree(flat, template)
+
+
+# ---------------------------------------------------------------------------
+# Paper-faithful MLP (MNIST, §7.1)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class MLPAdapter(_SerializationFlatten):
+    """The paper's 784-hidden-10 MLP over ``SyntheticImageDataset`` shards,
+    trained with SGD+momentum+decay exactly as §7.1 specifies."""
+
+    cfg: MLPConfig = MLPConfig()
+    local_epochs: int = 1
+    batch_size: int = 32
+    lr: float = 1e-3
+    momentum: float = 0.9
+    decay: float = 5e-4
+
+    name: str = "mlp"
+
+    def init(self, key: jax.Array) -> Any:
+        return mlp_init(self.cfg, key)
+
+    def local_train(self, params: Any, client: Client, *,
+                    seed: int = 0) -> tuple[Any, float]:
+        from repro.fl.client import local_train
+        return local_train(params, client, self.cfg,
+                           epochs=self.local_epochs,
+                           batch_size=self.batch_size, lr=self.lr,
+                           momentum=self.momentum, decay=self.decay,
+                           seed=seed)
+
+    def evaluate(self, params: Any, dataset: Any) -> EvalResult:
+        x = jnp.asarray(dataset.x)
+        y = jnp.asarray(dataset.y)
+        return EvalResult(
+            float(mlp_accuracy(params, x, y, cfg=self.cfg)),
+            float(mlp_loss(params, x, y, cfg=self.cfg)))
+
+
+# ---------------------------------------------------------------------------
+# LM families (transformer / RWKV6 / hybrid) over TokenDataset shards
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("model",))
+def _lm_sgd_step(model: Model, params: Any, opt_state, batch: dict,
+                 lr: float, momentum: float, decay: float):
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    params, opt_state = sgd_update(grads, opt_state, params,
+                                   lr=lr, momentum=momentum, decay=decay)
+    return params, opt_state, loss
+
+
+@dataclass
+class LMAdapter(_SerializationFlatten):
+    """Any ``model_api.Model`` family as a BHFL workload: FedSGD on
+    next-token cross-entropy over ``TokenDataset`` client shards; eval is
+    next-token top-1 accuracy + CE loss."""
+
+    arch: ArchConfig
+    local_epochs: int = 1
+    batch_size: int = 8
+    lr: float = 1e-2
+    momentum: float = 0.9
+    decay: float = 5e-4
+
+    def __post_init__(self):
+        self.model = Model(self.arch)
+        self.name = self.arch.name
+
+    def init(self, key: jax.Array) -> Any:
+        return self.model.init(key)
+
+    def local_train(self, params: Any, client: Client, *,
+                    seed: int = 0) -> tuple[Any, float]:
+        opt_state = sgd_init(params)
+        loss = jnp.asarray(0.0)
+        for ep in range(self.local_epochs):
+            for batch in client.data.batches(
+                    min(self.batch_size, client.data_size), seed=seed + ep):
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                params, opt_state, loss = _lm_sgd_step(
+                    self.model, params, opt_state, batch,
+                    self.lr, self.momentum, self.decay)
+        return params, float(loss)
+
+    def evaluate(self, params: Any, dataset: Any) -> EvalResult:
+        from repro.models.model_api import DEFAULT_AUX_WEIGHT, _token_ce_loss
+        rows = jnp.asarray(dataset.tokens)
+        batch = {"tokens": rows[:, :-1], "labels": rows[:, 1:]}
+        # one forward pass serves both metrics (Model.loss would rerun it)
+        logits, aux = self.model.forward(params, batch)
+        acc = jnp.mean((jnp.argmax(logits, axis=-1)
+                        == batch["labels"]).astype(jnp.float32))
+        loss = _token_ce_loss(logits, batch["labels"]) + DEFAULT_AUX_WEIGHT * aux
+        return EvalResult(float(acc), float(loss))
+
+
+def tiny_transformer_config(vocab_size: int = 256, d_model: int = 64,
+                            n_layers: int = 2) -> ArchConfig:
+    """CPU-scale dense transformer for BHFL rounds and tests."""
+    return ArchConfig(
+        name="bhfl-transformer-tiny", family="dense",
+        n_layers=n_layers, d_model=d_model, n_heads=2, n_kv_heads=2,
+        head_dim=d_model // 2, d_ff=2 * d_model, vocab_size=vocab_size,
+        source="repro.fl.adapters")
+
+
+def tiny_rwkv6_config(vocab_size: int = 256, d_model: int = 64,
+                      n_layers: int = 2) -> ArchConfig:
+    """CPU-scale RWKV-6 (attention-free) for BHFL rounds and tests."""
+    return ArchConfig(
+        name="bhfl-rwkv6-tiny", family="ssm",
+        n_layers=n_layers, d_model=d_model, n_heads=d_model // 32,
+        n_kv_heads=d_model // 32, d_ff=2 * d_model, vocab_size=vocab_size,
+        rwkv=True, rwkv_head_size=32, source="repro.fl.adapters")
+
+
+def transformer_adapter(vocab_size: int = 256, d_model: int = 64,
+                        n_layers: int = 2, **hp) -> LMAdapter:
+    return LMAdapter(tiny_transformer_config(vocab_size, d_model, n_layers),
+                     **hp)
+
+
+def rwkv6_adapter(vocab_size: int = 256, d_model: int = 64,
+                  n_layers: int = 2, **hp) -> LMAdapter:
+    return LMAdapter(tiny_rwkv6_config(vocab_size, d_model, n_layers), **hp)
+
+
+_NAMED = {"mlp": MLPAdapter, "transformer": transformer_adapter,
+          "rwkv6": rwkv6_adapter}
+
+
+def make_adapter(model: "str | ModelAdapter", **kwargs) -> ModelAdapter:
+    """Resolve ``model`` to an adapter: pass through an adapter instance,
+    or build one by name ('mlp' | 'transformer' | 'rwkv6')."""
+    if isinstance(model, str):
+        try:
+            return _NAMED[model](**kwargs)
+        except KeyError:
+            raise ValueError(
+                f"unknown model {model!r}; choose from {sorted(_NAMED)} "
+                f"or pass a ModelAdapter instance") from None
+    if isinstance(model, ModelAdapter):
+        return model
+    raise TypeError(f"model must be a name or ModelAdapter, got {type(model)}")

@@ -18,7 +18,7 @@ from repro.optim.sgd import sgd_init, sgd_update
 @dataclass
 class Client:
     client_id: int
-    data: SyntheticImageDataset
+    data: Any        # SyntheticImageDataset, TokenDataset, … (adapter-defined)
 
     @property
     def data_size(self) -> int:
@@ -39,7 +39,11 @@ def local_train(params: Any, client: Client, cfg: MLPConfig, *,
                 epochs: int = 1, batch_size: int = 32, lr: float = 1e-3,
                 momentum: float = 0.9, decay: float = 5e-4,
                 seed: int = 0) -> tuple[Any, float]:
-    """Run `epochs` of local SGD from `params`; returns (new_params, last_loss)."""
+    """Run `epochs` of local SGD from `params`; returns (new_params, last_loss).
+
+    Callers must skip empty clients (``BHFLRuntime._run_fel`` does); an
+    empty shard here raises via ``dataset.batches``'s batch-size check.
+    """
     opt_state = sgd_init(params)
     key = jax.random.key(seed)
     loss = jnp.asarray(0.0)

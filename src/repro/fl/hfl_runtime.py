@@ -4,12 +4,16 @@ Per BCFL round k:
   1. every cluster runs `fel_iterations` of FEL (clients local-train,
      edge FedAvg) starting from the current global model,
   2. the N resulting intermediate models W(k) go through one PoFEL
-     consensus round (HCDS → ME → BTSV → block mint),
+     consensus round (HCDS → ME → vote submission → BTSV tally → block
+     mint — the phase pipeline of ``repro.core.phases``),
   3. the weighted global aggregate gw(k) (Eq. 1) becomes the next round's
      starting model, and the block is appended to every ledger.
 
-Attack simulation hooks (plagiarists / bribery voters) are injected here so
-the paper's §7 experiments run against the same code path.
+The runtime is model-agnostic: a ``ModelAdapter`` (``repro.fl.adapters``)
+supplies init / local-train / eval / flatten / unflatten, so the same
+consensus path drives the paper's MNIST MLP, a transformer, or an RWKV6
+LM. Attack simulation hooks (plagiarists / bribery voters) are injected
+here so the paper's §7 experiments run against the same code path.
 """
 
 from __future__ import annotations
@@ -22,12 +26,10 @@ import numpy as np
 
 from repro.core.btsv import BTSVConfig
 from repro.core.consensus import ConsensusRecord, PoFELConsensus
-from repro.core.model_eval import flatten_model
-from repro.data.synthetic import SyntheticImageDataset
-from repro.fl.client import local_train
+from repro.fl.adapters import MLPAdapter, ModelAdapter
 from repro.fl.fedavg import fedavg
 from repro.fl.hierarchy import FELCluster
-from repro.models.mlp import MLPConfig, mlp_accuracy, mlp_init
+from repro.models.mlp import MLPConfig
 
 
 @dataclass
@@ -45,6 +47,12 @@ class BHFLConfig:
     g_max: float = 0.99
     seed: int = 0
 
+    def default_adapter(self) -> ModelAdapter:
+        """The paper's workload: the MNIST MLP with §7.1 hyperparameters."""
+        return MLPAdapter(cfg=self.mlp, local_epochs=self.local_epochs,
+                          batch_size=self.batch_size, lr=self.lr,
+                          momentum=self.momentum, decay=self.decay)
+
 
 @dataclass
 class RoundMetrics:
@@ -56,42 +64,51 @@ class RoundMetrics:
     consensus: ConsensusRecord
 
 
-def _unflatten_like(flat: np.ndarray, template: Any) -> Any:
-    """Inverse of core.model_eval.flatten_model (sorted-keypath order)."""
-    paths = jax.tree_util.tree_flatten_with_path(template)[0]
-    order = sorted(range(len(paths)),
-                   key=lambda i: jax.tree_util.keystr(paths[i][0]))
-    leaves_sorted = []
-    off = 0
-    for i in order:
-        leaf = paths[i][1]
-        n = leaf.size
-        leaves_sorted.append(np.asarray(flat[off:off + n], np.float32
-                                        ).reshape(leaf.shape))
-        off += n
-    leaves = [None] * len(paths)
-    for rank, i in enumerate(order):
-        leaves[i] = leaves_sorted[rank]
-    treedef = jax.tree_util.tree_structure(template)
-    return jax.tree_util.tree_unflatten(treedef, leaves)
+class AllNodesPlagiarizeError(RuntimeError):
+    """Every BCFL node was configured as a plagiarist — there is no honest
+    model to copy, and HCDS would reject every reveal anyway (§3.2)."""
 
 
 class BHFLRuntime:
-    """Drives FEL clusters + PoFEL consensus for a full learning task."""
+    """Drives FEL clusters + PoFEL consensus for a full learning task.
+
+    ``adapter`` chooses the model family (default: the paper's MNIST MLP);
+    the clusters' client datasets must match the adapter's batch format.
+    """
 
     def __init__(self, clusters: List[FELCluster], cfg: BHFLConfig,
-                 test_set: Optional[SyntheticImageDataset] = None):
+                 test_set: Optional[Any] = None,
+                 adapter: Optional[ModelAdapter] = None):
         assert len(clusters) == cfg.n_nodes
         self.clusters = clusters
         self.cfg = cfg
         self.test_set = test_set
+        self.adapter = adapter if adapter is not None else cfg.default_adapter()
         self.consensus = PoFELConsensus(cfg.n_nodes, cfg.btsv, g_max=cfg.g_max)
-        self.global_params = mlp_init(cfg.mlp, jax.random.key(cfg.seed))
+        self.global_params = self.adapter.init(jax.random.key(cfg.seed))
+        self._check_adapter_layout()
         self.history: List[RoundMetrics] = []
         # adversaries: node_id -> behaviour ('plagiarist' handled in fel,
         # vote hooks handled at consensus time)
         self.plagiarists: set[int] = set()
         self.vote_hook: Optional[Callable] = None
+
+    def _check_adapter_layout(self) -> None:
+        """ME produces gw(k) in the canonical sorted-keypath layout and the
+        runtime adopts it through ``adapter.unflatten``, so an adapter whose
+        flatten deviates from that layout would silently scramble weights
+        every round. Catch it once, at init."""
+        from repro.core.serialization import flatten_pytree
+        probe = np.asarray(self.adapter.flatten(self.global_params))
+        canonical = np.asarray(flatten_pytree(self.global_params))
+        if probe.shape != canonical.shape or not np.array_equal(probe,
+                                                                canonical):
+            raise ValueError(
+                f"adapter {getattr(self.adapter, 'name', type(self.adapter).__name__)!r} "
+                "flattens parameters in a non-canonical order; flatten/"
+                "unflatten must use the sorted-keypath layout of "
+                "core.serialization.flatten_pytree (inherit them from the "
+                "adapter base class)")
 
     # -- one FEL phase inside cluster `c` -----------------------------------
     def _run_fel(self, cluster: FELCluster, start_params: Any, round_seed: int) -> Any:
@@ -99,14 +116,17 @@ class BHFLRuntime:
         for it in range(self.cfg.fel_iterations):
             locals_, sizes = [], []
             for client in cluster.clients:
-                p, _ = local_train(
-                    params, client, self.cfg.mlp,
-                    epochs=self.cfg.local_epochs, batch_size=self.cfg.batch_size,
-                    lr=self.cfg.lr, momentum=self.cfg.momentum,
-                    decay=self.cfg.decay,
+                if client.data_size == 0:
+                    continue    # empty shard: zero FedAvg weight, skip
+                p, _ = self.adapter.local_train(
+                    params, client,
                     seed=round_seed * 1000 + client.client_id * 10 + it)
                 locals_.append(p)
                 sizes.append(client.data_size)
+            if not locals_:
+                # a dataless cluster keeps the incoming global model; its
+                # consensus weight (|DS_m| = 0) already zeroes it in Eq. 1
+                return params
             params = fedavg(locals_, sizes)
         return params
 
@@ -114,6 +134,11 @@ class BHFLRuntime:
     def run_round(self) -> RoundMetrics:
         cfg = self.cfg
         k = self.consensus.round
+        node_ids = {c.node_id for c in self.clusters}
+        if node_ids and node_ids <= self.plagiarists:
+            raise AllNodesPlagiarizeError(
+                f"all {cfg.n_nodes} nodes are plagiarists — at least one "
+                f"honest node must train a model for round {k}")
         models: List[Any] = []
         for cluster in self.clusters:
             if cluster.node_id in self.plagiarists:
@@ -132,16 +157,12 @@ class BHFLRuntime:
         record = self.consensus.run_round(models, sizes, vote_hook=self.vote_hook)
 
         # adopt gw(k) as the next global model
-        self.global_params = _unflatten_like(record.global_model, self.global_params)
+        self.global_params = self.adapter.unflatten(record.global_model,
+                                                    self.global_params)
 
         acc, loss = float("nan"), float("nan")
         if self.test_set is not None:
-            import jax.numpy as jnp
-            from repro.models.mlp import mlp_loss
-            x = jnp.asarray(self.test_set.x)
-            y = jnp.asarray(self.test_set.y)
-            acc = float(mlp_accuracy(self.global_params, x, y, cfg=cfg.mlp))
-            loss = float(mlp_loss(self.global_params, x, y, cfg=cfg.mlp))
+            acc, loss = self.adapter.evaluate(self.global_params, self.test_set)
 
         metrics = RoundMetrics(k, record.leader_id, acc, loss,
                                float(np.mean(record.similarities)), record)

@@ -23,7 +23,7 @@ class FELCluster:
         return sum(c.data_size for c in self.clients)
 
 
-def build_hierarchy(dataset: SyntheticImageDataset, n_nodes: int,
+def build_hierarchy(dataset, n_nodes: int,
                     clients_per_node: int = 5, distribution: str = "iid",
                     labels_per_client: int = 6, dirichlet_alpha: float = 0.5,
                     seed: int = 0) -> List[FELCluster]:
@@ -31,6 +31,9 @@ def build_hierarchy(dataset: SyntheticImageDataset, n_nodes: int,
 
     distribution: 'iid' | 'label' (paper's non-IID, ~6/10 labels per client)
                   | 'dirichlet'
+
+    ``dataset`` is anything with ``__len__``/``subset`` (images or tokens);
+    the label-aware partitions additionally need ``.y``/``.n_classes``.
     """
     n_clients = n_nodes * clients_per_node
     if distribution == "iid":

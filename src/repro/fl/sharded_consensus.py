@@ -1,0 +1,96 @@
+"""Sharded in-graph Model Evaluation for PoFEL (DESIGN.md §3).
+
+Cosine similarity (Eq. 2) reduces over the parameter axis, so a
+model-parallel deployment never needs to gather full models to run ME:
+each shard contributes three partial scalars per node
+
+    (<w_shard, gw_shard>, ||w_shard||^2, ||gw_shard||^2)
+
+which are summed across shards and combined
+(``core.model_eval.partial_terms`` / ``similarity_from_partials``).
+The aggregation (Eq. 1) is likewise shard-local.
+
+Two entry points:
+
+* :func:`sharded_model_evaluation` — functional ME over a list of
+  per-shard (N, d_s) arrays; numerically equivalent to the dense
+  ``model_evaluation`` but only 3·N scalars cross shard boundaries.
+* :class:`ShardedModelEvaluation` — a drop-in replacement for the
+  ``model_evaluation`` phase of ``PoFELConsensus``
+  (``consensus.replace_phase("model_evaluation", ShardedModelEvaluation(4))``),
+  exercising the decomposed path inside the host-side protocol.
+
+``repro.fl.pofel_trainer`` uses the same decomposition fully in-graph for
+LLM-scale training (per-leaf einsum partials under GSPMD).
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.model_eval import (MEResult, PartialTerms, flatten_model,
+                                   make_predictions, partial_terms,
+                                   similarity_from_partials)
+from repro.core.phases import ConsensusPhase, RoundContext
+
+
+def shard_flat(W: jax.Array, n_shards: int) -> List[jax.Array]:
+    """Split stacked flat models (N, D) into ``n_shards`` (N, d_s) shards
+    along the parameter axis (the model-parallel partition)."""
+    return jnp.array_split(W, n_shards, axis=1)
+
+
+def sharded_model_evaluation(shards: Sequence[jax.Array],
+                             data_sizes: jax.Array,
+                             g_max: float = 0.99) -> MEResult:
+    """ME (Alg. 3) where each shard holds a (N, d_s) slice of W.
+
+    Per shard: Eq. 1 aggregation is local; Eq. 2 contributes partial
+    reductions. Only the 3·N partial scalars (and the final gw digest
+    material) ever cross shard boundaries.
+    """
+    data_sizes = jnp.asarray(data_sizes, jnp.float32)
+    lam = data_sizes / jnp.sum(data_sizes)
+    n = shards[0].shape[0]
+
+    dot = jnp.zeros((n,), jnp.float32)
+    w_sq = jnp.zeros((n,), jnp.float32)
+    gw_sq = jnp.zeros((), jnp.float32)
+    gw_shards = []
+    for W_s in shards:
+        W_s = W_s.astype(jnp.float32)
+        gw_s = jnp.einsum("n,nd->d", lam, W_s)          # Eq. 1, shard-local
+        gw_shards.append(gw_s)
+        t = jax.vmap(lambda w: partial_terms(w, gw_s))(W_s)
+        dot = dot + t.dot
+        w_sq = w_sq + t.w_sq
+        gw_sq = gw_sq + jnp.vdot(gw_s, gw_s)
+
+    # broadcast: (N,) dot/w_sq against the scalar ||gw||^2
+    sims = similarity_from_partials(PartialTerms(dot, w_sq, gw_sq))
+    vote = jnp.argmax(sims).astype(jnp.int32)
+    preds = make_predictions(vote, n, g_max=g_max)
+    return MEResult(jnp.concatenate(gw_shards), sims, vote, preds)
+
+
+class ShardedModelEvaluation(ConsensusPhase):
+    """Phase-API wrapper: flattens the round's model pytrees, shards them
+    ``n_shards`` ways, and runs the decomposed ME. Drop-in for the dense
+    ``ModelEvaluation`` phase of ``PoFELConsensus``."""
+
+    name = "model_evaluation"
+
+    def __init__(self, n_shards: int = 2):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.n_shards = n_shards
+
+    def run(self, ctx: RoundContext) -> None:
+        W = jnp.stack([flatten_model(m) for m in ctx.models])
+        shards = shard_flat(W, min(self.n_shards, W.shape[1]))
+        ctx.evaluation = sharded_model_evaluation(
+            shards, jnp.asarray(ctx.data_sizes, jnp.float32), g_max=ctx.g_max)
+        ctx.extra["me_n_shards"] = len(shards)

@@ -24,6 +24,11 @@ from repro.models.layers import COMPUTE_DTYPE
 from repro.models.transformer import FwdOptions
 
 
+# default weight of the auxiliary (load-balancing) loss term; eval paths
+# that recombine (logits, aux) outside Model.loss must use the same value
+DEFAULT_AUX_WEIGHT = 0.01
+
+
 def _token_ce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
     """Cross entropy over (B, S, V) logits with V possibly sharded over the
     model axis: logsumexp + masked-iota reduction (no one-hot matmul, no
@@ -79,7 +84,7 @@ class Model:
 
     def loss(self, params: dict, batch: dict,
              opts: FwdOptions = FwdOptions(),
-             aux_weight: float = 0.01) -> jax.Array:
+             aux_weight: float = DEFAULT_AUX_WEIGHT) -> jax.Array:
         logits, aux = self.forward(params, batch, opts)
         return _token_ce_loss(logits, batch["labels"]) + aux_weight * aux
 

@@ -1,0 +1,181 @@
+"""ModelAdapter protocol + model-agnostic BHFL runtime + repro.api facade:
+two model families through the same consensus path, flatten/unflatten
+roundtrip, all-plagiarist guard."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.serialization import flatten_pytree, unflatten_pytree
+from repro.data.tokens import make_token_dataset
+from repro.fl import (AllNodesPlagiarizeError, BHFLConfig, BHFLRuntime,
+                      MLPAdapter, ModelAdapter, build_hierarchy, make_adapter,
+                      rwkv6_adapter, transformer_adapter)
+
+
+def test_make_adapter_resolution():
+    assert isinstance(make_adapter("mlp"), MLPAdapter)
+    ad = rwkv6_adapter(vocab_size=32)
+    assert make_adapter(ad) is ad
+    with pytest.raises(ValueError, match="unknown model"):
+        make_adapter("resnet")
+    assert isinstance(MLPAdapter(), ModelAdapter)
+
+
+@pytest.mark.parametrize("mk", [
+    lambda: MLPAdapter(),
+    lambda: transformer_adapter(vocab_size=32, d_model=64),
+    lambda: rwkv6_adapter(vocab_size=32, d_model=64),
+], ids=["mlp", "transformer", "rwkv6"])
+def test_flatten_unflatten_roundtrip_preserves_params(mk):
+    ad = mk()
+    params = ad.init(jax.random.key(0))
+    flat = ad.flatten(params)
+    assert flat.ndim == 1 and flat.dtype == np.float32
+    back = ad.unflatten(np.asarray(flat), params)
+    for orig, rt in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        assert orig.dtype == rt.dtype and orig.shape == rt.shape
+        np.testing.assert_allclose(np.asarray(orig, np.float32),
+                                   np.asarray(rt, np.float32), rtol=1e-2)
+
+
+def test_unflatten_rejects_wrong_length():
+    params = MLPAdapter().init(jax.random.key(0))
+    with pytest.raises(ValueError, match="elements"):
+        unflatten_pytree(np.zeros(17, np.float32), params)
+
+
+def test_flatten_order_matches_model_eval():
+    from repro.core.model_eval import flatten_model
+    params = MLPAdapter().init(jax.random.key(1))
+    np.testing.assert_array_equal(np.asarray(flatten_model(params)),
+                                  np.asarray(flatten_pytree(params)))
+
+
+@pytest.mark.slow
+def test_two_model_families_share_the_consensus_path():
+    """Acceptance: a full consensus round with MLP and RWKV6 through the
+    same ModelAdapter interface — identical runtime, phases, and chain."""
+    token_train, token_test = make_token_dataset(n_seqs=64, seq_len=16,
+                                                 vocab_size=32)
+    img_train, img_test = api.make_mnist_like(n_train=600, n_test=100)
+    cfg = BHFLConfig(n_nodes=3, clients_per_node=2, fel_iterations=1)
+    for adapter, (train, test) in [
+            (MLPAdapter(), (img_train, img_test)),
+            (rwkv6_adapter(vocab_size=32, d_model=64),
+             (token_train, token_test))]:
+        rt = BHFLRuntime(build_hierarchy(train, 3, 2, "iid"), cfg, test,
+                         adapter=adapter)
+        m = rt.run_round()
+        assert np.isfinite(m.test_loss)
+        assert rt.consensus.ledgers[0].verify_chain()
+        assert rt.consensus.ledgers[0].height == 1
+        assert [p.name for p in rt.consensus.phases][0] == "commit_reveal"
+
+
+@pytest.mark.slow
+def test_api_run_bhfl_facade_mlp():
+    run = api.run_bhfl(model="mlp", rounds=2, n_nodes=3, clients_per_node=2,
+                       fel_iterations=1,
+                       data=api.make_mnist_like(n_train=600, n_test=100))
+    assert run.chain_height == 2 and run.chain_valid
+    assert len(run.history) == 2
+    assert len(run.agreement.participants) == 3
+    # leader + FEL rewards settled each round
+    assert sum(run.rewards.block_rewards.values()) == pytest.approx(
+        2 * run.task.block_reward)
+
+
+def test_all_plagiarists_raises_clear_error():
+    train, test = api.make_mnist_like(n_train=200, n_test=40)
+    cfg = BHFLConfig(n_nodes=2, clients_per_node=2, fel_iterations=1)
+    rt = BHFLRuntime(build_hierarchy(train, 2, 2, "iid"), cfg, test)
+    rt.plagiarists = {0, 1}
+    with pytest.raises(AllNodesPlagiarizeError, match="honest node"):
+        rt.run_round()
+
+
+def test_plagiarist_ids_outside_hierarchy_do_not_trip_guard():
+    """Non-existent node ids padding the plagiarist set must not mask the
+    honest nodes that do exist."""
+    train, test = api.make_mnist_like(n_train=200, n_test=40)
+    cfg = BHFLConfig(n_nodes=2, clients_per_node=2, fel_iterations=1)
+    rt = BHFLRuntime(build_hierarchy(train, 2, 2, "iid"), cfg, test)
+    rt.plagiarists = {1, 99}          # node 0 is honest
+    m = rt.run_round()                # must not raise
+    assert m.consensus.rejected.get(1) == "plagiarized-model"
+
+
+def test_run_bhfl_honours_cfg_hyperparameters():
+    """A caller-supplied BHFLConfig drives the adapter (lr, batch, mlp
+    architecture) instead of being silently replaced by defaults."""
+    from repro.models.mlp import MLPConfig
+    cfg = BHFLConfig(n_nodes=2, clients_per_node=2, fel_iterations=1,
+                     lr=5e-2, batch_size=16, mlp=MLPConfig(hidden=32))
+    run = api.run_bhfl(model="mlp", cfg=cfg, rounds=1,
+                       data=api.make_mnist_like(n_train=200, n_test=40))
+    ad = run.runtime.adapter
+    assert ad.cfg.hidden == 32 and ad.lr == 5e-2 and ad.batch_size == 16
+    # and the trained global model really has the requested architecture
+    assert run.runtime.global_params["w1"].shape == (784, 32)
+
+
+def test_empty_client_shards_do_not_crash_training():
+    """More clients than sequences leaves some shards empty; those clients
+    contribute nothing instead of crashing batches(0)."""
+    data = api.make_token_dataset(n_seqs=4, seq_len=8, vocab_size=32)
+    run = api.run_bhfl(model="transformer", data=data, rounds=1,
+                       n_nodes=2, clients_per_node=4, fel_iterations=1)
+    assert run.chain_height == 1 and run.chain_valid
+    # a fully-dataless cluster must not poison the global model (fedavg
+    # over zero total weight used to produce NaNs)
+    assert np.isfinite(run.history[-1].test_loss)
+    with pytest.raises(ValueError, match="batch_size must be positive"):
+        next(data[0].batches(0))
+
+
+def test_run_bhfl_rejects_cfg_kwarg_conflicts_and_bad_lm_distribution():
+    with pytest.raises(ValueError, match="conflicts with cfg"):
+        api.run_bhfl(model="mlp", cfg=BHFLConfig(n_nodes=4), n_nodes=8,
+                     rounds=1)
+    with pytest.raises(ValueError, match="support 'iid' only"):
+        api.run_bhfl(model="transformer", distribution="label",
+                     n_nodes=2, clients_per_node=2, rounds=1)
+
+
+def test_run_bhfl_matches_lm_vocab_to_data():
+    data = api.make_token_dataset(n_seqs=48, seq_len=8, vocab_size=48)
+    run = api.run_bhfl(model="rwkv6", data=data, rounds=1, n_nodes=2,
+                       clients_per_node=2, fel_iterations=1)
+    assert run.runtime.adapter.arch.vocab_size == 48
+    # an explicit adapter with a smaller vocab than the data is rejected
+    with pytest.raises(ValueError, match="vocab_size"):
+        api.run_bhfl(model=rwkv6_adapter(vocab_size=32), data=data,
+                     rounds=1, n_nodes=2, clients_per_node=2,
+                     fel_iterations=1)
+
+
+def test_non_canonical_adapter_flatten_rejected_at_init():
+    """An adapter whose flatten deviates from the canonical sorted-keypath
+    layout would scramble gw adoption — the runtime refuses it up front."""
+    class BadOrder(MLPAdapter):
+        def flatten(self, params):
+            import jax.numpy as jnp
+            return jnp.concatenate(
+                [jnp.ravel(l) for l in jax.tree.leaves(params)][::-1])
+
+    train, test = api.make_mnist_like(n_train=200, n_test=40)
+    cfg = BHFLConfig(n_nodes=2, clients_per_node=2, fel_iterations=1)
+    with pytest.raises(ValueError, match="non-canonical"):
+        BHFLRuntime(build_hierarchy(train, 2, 2, "iid"), cfg, test,
+                    adapter=BadOrder())
+
+
+def test_plagiarist_minority_is_rejected_by_hcds():
+    train, test = api.make_mnist_like(n_train=300, n_test=40)
+    cfg = BHFLConfig(n_nodes=3, clients_per_node=2, fel_iterations=1)
+    rt = BHFLRuntime(build_hierarchy(train, 3, 2, "iid"), cfg, test)
+    rt.plagiarists = {2}
+    m = rt.run_round()
+    assert m.consensus.rejected.get(2) == "plagiarized-model"

@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# hypothesis is optional: the shim degrades @given to a deterministic
+# sweep (a bare module-level import used to ERROR the whole module).
+from _hypothesis_compat import given, settings, st
 
 from repro.data.partition import (partition_dirichlet, partition_iid,
                                   partition_label_limited)

@@ -8,6 +8,8 @@ from repro.data.synthetic import make_mnist_like
 from repro.fl.hfl_runtime import BHFLConfig, BHFLRuntime
 from repro.fl.hierarchy import build_hierarchy
 
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def trained():

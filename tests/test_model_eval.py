@@ -4,7 +4,7 @@ partial-term decomposition used by the sharded consensus."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.model_eval import (aggregate_global, cosine_similarities,
                                    flatten_model, make_predictions,

@@ -1,0 +1,166 @@
+"""Phase-based consensus protocol API: pipeline composition, RoundContext
+flow, phase hooks, adversarial vote_hook, and the sharded ME drop-in."""
+
+import numpy as np
+import pytest
+
+from repro.core.btsv import BTSVConfig
+from repro.core.consensus import PoFELConsensus
+from repro.core.model_eval import model_evaluation
+from repro.core.phases import ConsensusPhase, RoundContext
+from repro.fl.sharded_consensus import (ShardedModelEvaluation, shard_flat,
+                                        sharded_model_evaluation)
+
+
+def _models(n, rng, d=64):
+    return [{"w": rng.normal(size=(d,)).astype(np.float32)} for _ in range(n)]
+
+
+def test_default_pipeline_is_the_five_paper_phases(rng):
+    c = PoFELConsensus(4)
+    assert [p.name for p in c.phases] == [
+        "commit_reveal", "model_evaluation", "vote_collection", "tally",
+        "block_mint"]
+
+
+def test_round_context_flows_through_phases(rng):
+    """Every phase's output lands in the context a later phase consumed."""
+    c = PoFELConsensus(4)
+    seen = {}
+
+    def snapshot(name, ctx):
+        seen[name] = dict(
+            evaluation=ctx.evaluation is not None,
+            votes=ctx.votes is not None,
+            btsv=ctx.btsv is not None,
+            block=ctx.block is not None)
+
+    c.add_phase_hook("*", snapshot, when="after")
+    rec = c.run_round(_models(4, rng), [10.0] * 4)
+    assert seen["commit_reveal"] == dict(evaluation=False, votes=False,
+                                         btsv=False, block=False)
+    assert seen["model_evaluation"]["evaluation"]
+    assert seen["vote_collection"]["votes"]
+    assert seen["tally"]["btsv"]
+    assert seen["block_mint"]["block"]
+    assert 0 <= rec.leader_id < 4
+
+
+def test_before_and_after_hooks_fire_in_order(rng):
+    c = PoFELConsensus(3)
+    order = []
+    c.add_phase_hook("tally", lambda n, ctx: order.append("before"),
+                     when="before")
+    c.add_phase_hook("tally", lambda n, ctx: order.append("after"),
+                     when="after")
+    c.run_round(_models(3, rng), [10.0] * 3)
+    assert order == ["before", "after"]
+
+
+def test_bad_hook_when_rejected(rng):
+    with pytest.raises(ValueError, match="before.*after"):
+        PoFELConsensus(3).add_phase_hook("tally", lambda n, c: None,
+                                        when="during")
+
+
+def test_phase_hook_can_tamper_votes_btsv_still_elects_honest(rng):
+    """Bribery injected via an after-hook on model_evaluation (flipping the
+    similarity argmax seen by malicious voters) instead of vote_hook —
+    the new phase-level attack surface; tally still elects honestly after
+    weights adapt (§7.4)."""
+    n = 8
+    c = PoFELConsensus(n)
+    models = _models(n, rng)
+
+    def bribe(i, honest_vote, preds):
+        if i >= n - 3:
+            p = np.full_like(preds, (1 - 0.99) / (n - 1))
+            p[0] = 0.99
+            return 0, p
+        return honest_vote, preds
+
+    def install_bribe(name, ctx):
+        ctx.vote_hook = bribe
+
+    c.add_phase_hook("model_evaluation", install_bribe, when="after")
+    leaders = [c.run_round(models, [10.0] * n).leader_id for _ in range(10)]
+    honest = int(np.argmax(model_evaluation(
+        np.stack([m["w"] for m in models]),
+        np.full(n, 10.0, np.float32)).similarities))
+    assert leaders[-1] == honest
+    # bribed nodes' vote weights collapsed below every honest node's
+    w = np.asarray(c.contract.result(9).weights)
+    assert w[n - 3:].max() < w[:n - 3].min()
+
+
+def test_replace_phase_with_sharded_me_same_leader(rng):
+    models = _models(6, rng, d=97)
+    dense = PoFELConsensus(6)
+    sharded = PoFELConsensus(6)
+    sharded.replace_phase("model_evaluation", ShardedModelEvaluation(4))
+    r1 = dense.run_round(models, [7.0, 3.0, 9.0, 4.0, 5.0, 6.0])
+    r2 = sharded.run_round(models, [7.0, 3.0, 9.0, 4.0, 5.0, 6.0])
+    assert r1.leader_id == r2.leader_id
+    np.testing.assert_allclose(r1.similarities, r2.similarities, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(r1.global_model),
+                               np.asarray(r2.global_model), rtol=1e-5)
+
+
+def test_sharded_me_matches_dense_functionally(rng):
+    W = rng.normal(size=(5, 103)).astype(np.float32)
+    sizes = np.asarray([10.0, 20.0, 5.0, 8.0, 13.0], np.float32)
+    dense = model_evaluation(W, sizes)
+    sh = sharded_model_evaluation(shard_flat(W, 4), sizes)
+    np.testing.assert_allclose(np.asarray(dense.similarities),
+                               np.asarray(sh.similarities), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(dense.global_model),
+                               np.asarray(sh.global_model), rtol=1e-5)
+    assert int(dense.vote) == int(sh.vote)
+
+
+def test_replace_unknown_phase_raises(rng):
+    class Noop(ConsensusPhase):
+        name = "noop"
+
+        def run(self, ctx):
+            pass
+
+    with pytest.raises(KeyError, match="no phase named"):
+        PoFELConsensus(3).replace_phase("definitely-not-a-phase", Noop())
+
+
+def test_btsv_config_not_shared_between_instances():
+    """A config passed to one driver stays on that driver (and sizes its
+    contract history); other instances get independent defaults."""
+    custom = BTSVConfig(history=3, beta=2.0)
+    a = PoFELConsensus(4, btsv_cfg=custom)
+    b = PoFELConsensus(4)
+    assert a.btsv_cfg == custom
+    assert b.btsv_cfg == BTSVConfig()
+    assert a.btsv_cfg is not b.btsv_cfg
+    assert a.contract.cfg is not b.contract.cfg
+    assert a.contract._history.shape[0] == 3
+    assert b.contract._history.shape[0] == BTSVConfig().history
+
+
+def test_context_properties_guard_phase_order():
+    ctx = RoundContext(round=0, models=[], data_sizes=[], n_nodes=0)
+    with pytest.raises(RuntimeError, match="before ModelEvaluation"):
+        _ = ctx.similarities
+    with pytest.raises(RuntimeError, match="before ModelEvaluation"):
+        _ = ctx.global_model
+
+
+def test_vote_hook_still_supported_on_run_round(rng):
+    """The legacy vote_hook= path (pre-phase API) keeps working."""
+    n = 6
+    c = PoFELConsensus(n)
+    models = _models(n, rng)
+    calls = []
+
+    def hook(i, v, p):
+        calls.append(i)
+        return v, p
+
+    c.run_round(models, [10.0] * n, vote_hook=hook)
+    assert calls == list(range(n))

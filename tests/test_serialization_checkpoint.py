@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
 from repro.core.serialization import deserialize_pytree_flat, serialize_pytree
