@@ -46,6 +46,7 @@ from repro.data.tokens import make_token_dataset
 from repro.fl.adapters import (LMAdapter, MLPAdapter, ModelAdapter,
                                make_adapter, rwkv6_adapter,
                                transformer_adapter)
+from repro.fl.batched_fel import BatchedFELEngine, BatchedTrainSpec
 from repro.fl.hfl_runtime import (AllNodesPlagiarizeError, BHFLConfig,
                                   BHFLRuntime, RoundMetrics)
 from repro.fl.hierarchy import build_hierarchy
@@ -63,6 +64,7 @@ __all__ = [
     "RoundContext", "ConsensusPhase", "CommitReveal", "ModelEvaluation",
     "VoteCollection", "Tally", "BlockMint", "run_phases",
     "ShardedModelEvaluation", "AllNodesPlagiarizeError",
+    "BatchedFELEngine", "BatchedTrainSpec",
     "make_mnist_like", "make_token_dataset",
 ]
 
@@ -116,6 +118,7 @@ def run_bhfl(task: Optional[LearningTask] = None,
              clients_per_node: Optional[int] = None,
              fel_iterations: Optional[int] = None,
              rounds: Optional[int] = None,
+             engine: Optional[str] = None,
              distribution: str = "iid",
              gamma: Optional[Dict[int, float]] = None,
              mu: Optional[Dict[int, float]] = None,
@@ -135,6 +138,10 @@ def run_bhfl(task: Optional[LearningTask] = None,
             adapter instance (e.g. ``rwkv6_adapter(lr=...)``) to override.
         data: (train, test) datasets matching the adapter's batch format;
             synthesized per family when omitted.
+        engine: FEL engine — 'reference' (paper-shaped per-client loop,
+            the default), 'batched' (in-graph vmap/scan fast path — one
+            jitted program per round), or 'auto' (batched when the
+            adapter supports it). See ``repro.fl.batched_fel``.
         cfg: full ``BHFLConfig`` override; otherwise one is built from
             ``n_nodes``/``clients_per_node``/``fel_iterations``/``seed``
             (defaults 6/4/2/0). Passing ``cfg`` together with a
@@ -158,12 +165,14 @@ def run_bhfl(task: Optional[LearningTask] = None,
                          if clients_per_node is not None else 4,
                          fel_iterations=fel_iterations
                          if fel_iterations is not None else 2,
-                         seed=seed if seed is not None else 0)
+                         seed=seed if seed is not None else 0,
+                         engine=engine if engine is not None else "reference")
     else:
         for kwarg, val, cfg_val in (
                 ("n_nodes", n_nodes, cfg.n_nodes),
                 ("clients_per_node", clients_per_node, cfg.clients_per_node),
                 ("fel_iterations", fel_iterations, cfg.fel_iterations),
+                ("engine", engine, cfg.engine),
                 ("seed", seed, cfg.seed)):
             if val is not None and val != cfg_val:
                 raise ValueError(

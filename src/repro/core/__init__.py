@@ -29,6 +29,7 @@ _EXPORTS = {
     "BlockMint": "repro.core.phases", "run_phases": "repro.core.phases",
     "flatten_pytree": "repro.core.serialization",
     "unflatten_pytree": "repro.core.serialization",
+    "unflatten_pytree_device": "repro.core.serialization",
     "serialize_pytree": "repro.core.serialization",
     "MEResult": "repro.core.model_eval", "aggregate_global": "repro.core.model_eval",
     "cosine_similarities": "repro.core.model_eval",

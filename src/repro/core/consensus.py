@@ -134,9 +134,14 @@ class PoFELConsensus:
         run_phases(self.phases, ctx,
                    before=self._before_hooks, after=self._after_hooks)
         self.round += 1
+        # gw(k) stays whatever ME produced (a device array on the jitted
+        # paths) — adopting it must not force a host roundtrip; callers
+        # that need numpy wrap it in np.asarray themselves
+        gw = (ctx.evaluation.global_model if ctx.evaluation is not None
+              else None)
         return ConsensusRecord(ctx.round, ctx.leader, ctx.similarities,
                                ctx.votes, ctx.btsv, ctx.block,
-                               ctx.global_model, ctx.rejected)
+                               gw, ctx.rejected)
 
     @property
     def chain(self) -> List[Block]:

@@ -74,10 +74,17 @@ class HCDSNode:
         self._own: Dict[int, tuple[bytes, bytes]] = {}  # round -> (nonce, model_bytes)
 
     # -- commit stage -----------------------------------------------------
-    def commit(self, model: Any, round: int) -> Commitment:
-        """Alg. 2 lines 1-4: build this node's commitment for ``round``."""
+    def commit(self, model: Any, round: int,
+               model_bytes: Optional[bytes] = None) -> Commitment:
+        """Alg. 2 lines 1-4: build this node's commitment for ``round``.
+
+        ``model_bytes`` lets the caller hand in the already-serialized
+        model so one round serializes each model exactly once (the driver
+        reuses the same bytes for the block's model digests).
+        """
         nonce = crypto.random_nonce(self.nonce_len)
-        model_bytes = serialize_pytree(model)
+        if model_bytes is None:
+            model_bytes = serialize_pytree(model)
         digest = crypto.sha256_digest(nonce, model_bytes)
         tag = crypto.dsign(digest, self.keypair.private_key)
         self._own[round] = (nonce, model_bytes)
@@ -131,13 +138,22 @@ class HCDSNode:
 
 def run_hcds_round(nodes: list[HCDSNode], models: list[Any], round: int,
                    public_keys: Optional[dict[int, crypto.Point]] = None,
+                   model_bytes: Optional[list[bytes]] = None,
                    ) -> dict[int, dict[int, HCDSResult]]:
     """Drive one full commit+reveal exchange among honest ``nodes``.
 
     Returns {receiver_id: {sender_id: result}} for the reveal stage.
+
+    Each model is serialized exactly once per round: the per-sender bytes
+    are computed up front (or taken from ``model_bytes`` if the caller
+    already has them, e.g. to reuse for block digests) and threaded
+    through ``commit``/``reveal`` instead of being re-derived per message.
     """
     pks = public_keys or {n.node_id: n.keypair.public_key for n in nodes}
-    commits = [n.commit(m, round) for n, m in zip(nodes, models)]
+    if model_bytes is None:
+        model_bytes = [serialize_pytree(m) for m in models]
+    commits = [n.commit(m, round, model_bytes=b)
+               for n, m, b in zip(nodes, models, model_bytes)]
     for c in commits:
         for n in nodes:
             if n.node_id != c.node_id:

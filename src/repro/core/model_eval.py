@@ -70,12 +70,28 @@ def make_predictions(vote: jax.Array, n: int, g_max: float = 0.99) -> jax.Array:
     return jnp.full((n,), g_min).at[vote].set(g_max)
 
 
-@partial(jax.jit, static_argnames=("g_max",))
+@partial(jax.jit, static_argnames=("g_max", "use_kernel", "interpret"))
 def model_evaluation(W: jax.Array, data_sizes: jax.Array,
-                     g_max: float = 0.99) -> MEResult:
-    """Full ME (Alg. 3) over stacked (N, D) models."""
+                     g_max: float = 0.99, *, use_kernel: "bool | None" = None,
+                     interpret: "bool | None" = None) -> MEResult:
+    """Full ME (Alg. 3) over stacked (N, D) models.
+
+    Backend-aware Eq. 2 routing: where the fused Pallas ``cosine_partials``
+    kernel compiles natively (TPU) it does all three reductions
+    (dot/‖w‖²/‖gw‖²) in one HBM pass; elsewhere the pure-jnp path runs —
+    interpret-mode emulation is ~100× slower than jnp at paper scale on
+    CPU, so it is opt-in only (``use_kernel=True``).
+    """
+    from repro.kernels.cosine_sim import cosine_partials, interpret_default
+    if use_kernel is None:
+        use_kernel = not interpret_default()
     gw = aggregate_global(W, data_sizes)
-    sims = cosine_similarities(W, gw)
+    if use_kernel:
+        dot, wsq, gsq = cosine_partials(W.astype(jnp.float32),
+                                        gw, interpret=interpret)
+        sims = dot / jnp.maximum(jnp.sqrt(wsq) * jnp.sqrt(gsq), 1e-12)
+    else:
+        sims = cosine_similarities(W, gw)
     vote = jnp.argmax(sims).astype(jnp.int32)
     preds = make_predictions(vote, W.shape[0], g_max=g_max)
     return MEResult(gw, sims, vote, preds)

@@ -106,8 +106,13 @@ class CommitReveal(ConsensusPhase):
         self.public_keys = public_keys
 
     def run(self, ctx: RoundContext) -> None:
+        # serialize each model once; HCDS commits and the block's model
+        # digests (BlockMint) both reuse these bytes
+        model_bytes = [serialize_pytree(m) for m in ctx.models]
+        ctx.extra["model_bytes"] = model_bytes
         reveal_results = run_hcds_round(self.nodes, ctx.models, ctx.round,
-                                        self.public_keys)
+                                        self.public_keys,
+                                        model_bytes=model_bytes)
         for recv, senders in reveal_results.items():
             for sender, res in senders.items():
                 if not res.accepted and sender not in ctx.rejected:
@@ -189,9 +194,15 @@ class BlockMint(ConsensusPhase):
             raise RuntimeError("BlockMint requires a prior Tally")
         n = ctx.n_nodes
         leader = ctx.leader
+        # reuse the bytes CommitReveal already serialized (one
+        # serialization per model per round); fall back if the pipeline
+        # was rearranged without a CommitReveal stage
+        model_bytes = ctx.extra.get("model_bytes")
+        if model_bytes is None or len(model_bytes) != len(ctx.models):
+            model_bytes = [serialize_pytree(m) for m in ctx.models]
         model_digests = {
-            i: crypto.sha256_digest(serialize_pytree(m)).hex()
-            for i, m in enumerate(ctx.models)
+            i: crypto.sha256_digest(b).hex()
+            for i, b in enumerate(model_bytes)
         }
         gw_digest = crypto.sha256_digest(
             np.asarray(ctx.global_model, np.float32).tobytes()).hex()

@@ -42,27 +42,48 @@ def flatten_pytree(tree: Any) -> jax.Array:
         [jnp.ravel(leaf).astype(jnp.float32) for _, leaf in _sorted_leaves(tree)])
 
 
-def unflatten_pytree(flat: Any, template: Any) -> Any:
-    """Inverse of :func:`flatten_pytree`: rebuild a pytree shaped/dtyped
-    like ``template`` from a flat vector (sorted-keypath order)."""
-    flat = np.asarray(flat)
+def _unflatten_with(flat: Any, template: Any, make_leaf) -> Any:
+    """Shared sorted-keypath offset walk for the unflatten variants.
+
+    ``make_leaf(chunk, leaf)`` materializes one leaf from the flat slice
+    ``chunk`` (shaped like ``leaf``); the ordering/offset logic — the part
+    that must stay in lockstep with :func:`flatten_pytree` and
+    :func:`serialize_pytree` — lives only here.
+    """
     paths = jax.tree_util.tree_flatten_with_path(template)[0]
     sizes = [int(np.prod(leaf.shape, dtype=np.int64)) if leaf.shape else 1
              for _, leaf in paths]
-    if sum(sizes) != flat.size:
+    n_flat = flat.shape[0] if hasattr(flat, "shape") else flat.size
+    if sum(sizes) != n_flat:
         raise ValueError(
-            f"flat vector has {flat.size} elements; template needs {sum(sizes)}")
+            f"flat vector has {n_flat} elements; template needs {sum(sizes)}")
     order = sorted(range(len(paths)), key=lambda i: _keystr(paths[i][0]))
     leaves = [None] * len(paths)
     off = 0
     for i in order:
         leaf = paths[i][1]
         n = sizes[i]
-        chunk = flat[off:off + n].reshape(leaf.shape)
-        leaves[i] = jnp.asarray(chunk, dtype=leaf.dtype)
+        leaves[i] = make_leaf(flat[off:off + n].reshape(leaf.shape), leaf)
         off += n
     treedef = jax.tree_util.tree_structure(template)
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def unflatten_pytree(flat: Any, template: Any) -> Any:
+    """Inverse of :func:`flatten_pytree`: rebuild a pytree shaped/dtyped
+    like ``template`` from a flat vector (sorted-keypath order)."""
+    return _unflatten_with(np.asarray(flat), template,
+                           lambda chunk, leaf: jnp.asarray(chunk,
+                                                           dtype=leaf.dtype))
+
+
+def unflatten_pytree_device(flat: Any, template: Any) -> Any:
+    """Jit-traceable :func:`unflatten_pytree`: identical sorted-keypath
+    layout, but pure jnp slicing so the flat vector never leaves the
+    device. The batched FEL runtime uses this to adopt gw(k) without a
+    flatten→host→unflatten roundtrip."""
+    return _unflatten_with(jnp.asarray(flat), template,
+                           lambda chunk, leaf: chunk.astype(leaf.dtype))
 
 
 def serialize_pytree(tree: Any) -> bytes:

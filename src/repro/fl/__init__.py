@@ -1,5 +1,7 @@
 from repro.fl.adapters import (EvalResult, LMAdapter, MLPAdapter, ModelAdapter,
                                make_adapter, rwkv6_adapter, transformer_adapter)
+from repro.fl.batched_fel import (BatchedFELEngine, BatchedTrainSpec,
+                                  engine_for)
 from repro.fl.client import Client, local_train
 from repro.fl.fedavg import fedavg
 from repro.fl.hierarchy import FELCluster, build_hierarchy
@@ -9,5 +11,6 @@ from repro.fl.hfl_runtime import (AllNodesPlagiarizeError, BHFLConfig,
 __all__ = ["Client", "local_train", "fedavg", "FELCluster", "build_hierarchy",
            "BHFLConfig", "BHFLRuntime", "RoundMetrics",
            "AllNodesPlagiarizeError",
+           "BatchedFELEngine", "BatchedTrainSpec", "engine_for",
            "ModelAdapter", "MLPAdapter", "LMAdapter", "EvalResult",
            "make_adapter", "transformer_adapter", "rwkv6_adapter"]

@@ -78,6 +78,16 @@ class ModelAdapter(Protocol):
         """Inverse of :meth:`flatten`, shaped/dtyped like ``template``."""
         ...
 
+    # Optional: adapters that can train inside the batched in-graph FEL
+    # engine additionally expose
+    #
+    #     def batched_train_spec(self) -> repro.fl.batched_fel.BatchedTrainSpec
+    #
+    # (sample-major dataset stacking + a per-example loss). Adapters
+    # without it simply fall back to the per-client reference loop when
+    # ``BHFLConfig(engine="batched")`` is requested with engine="auto"
+    # semantics — see ``repro.fl.batched_fel.engine_for``.
+
 
 class _SerializationFlatten:
     """Shared flatten/unflatten via the canonical serialization roundtrip."""
@@ -126,6 +136,25 @@ class MLPAdapter(_SerializationFlatten):
             float(mlp_accuracy(params, x, y, cfg=self.cfg)),
             float(mlp_loss(params, x, y, cfg=self.cfg)))
 
+    def batched_train_spec(self):
+        """Batched in-graph FEL support (``repro.fl.batched_fel``)."""
+        import numpy as np
+        from repro.fl.batched_fel import BatchedTrainSpec
+        from repro.models.mlp import mlp_per_example_loss
+        cfg = self.cfg
+
+        def stack(dataset):
+            return {"x": np.asarray(dataset.x, np.float32),
+                    "y": np.asarray(dataset.y, np.int32)}
+
+        def per_example(params, batch, key):
+            return mlp_per_example_loss(params, batch["x"], batch["y"],
+                                        cfg=cfg, train=True, dropout_key=key)
+
+        return BatchedTrainSpec(stack, per_example, self.local_epochs,
+                                self.batch_size, self.lr, self.momentum,
+                                self.decay)
+
 
 # ---------------------------------------------------------------------------
 # LM families (transformer / RWKV6 / hybrid) over TokenDataset shards
@@ -172,6 +201,37 @@ class LMAdapter(_SerializationFlatten):
                     self.model, params, opt_state, batch,
                     self.lr, self.momentum, self.decay)
         return params, float(loss)
+
+    def batched_train_spec(self):
+        """Batched in-graph FEL support (``repro.fl.batched_fel``): token
+        rows stack densely; the per-example loss is the per-row mean token
+        CE plus the (batch-global) aux term, so for the dense/ssm families
+        (aux ≡ 0) the masked-mean reduction reproduces ``Model.loss``
+        exactly. MoE families would see a padding-dependent aux term —
+        route those through the reference loop."""
+        import numpy as np
+        from repro.fl.batched_fel import BatchedTrainSpec
+        from repro.models.model_api import DEFAULT_AUX_WEIGHT
+        model = self.model
+
+        def stack(dataset):
+            return {"rows": np.asarray(dataset.tokens, np.int32)}
+
+        def per_example(params, batch, key):
+            rows = batch["rows"]
+            b = {"tokens": rows[:, :-1], "labels": rows[:, 1:]}
+            logits, aux = model.forward(params, b)
+            logits = logits.astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            vidx = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                            logits.ndim - 1)
+            mask = vidx == b["labels"][..., None].astype(jnp.int32)
+            gold = jnp.sum(jnp.where(mask, logits, 0.0), axis=-1)
+            return jnp.mean(lse - gold, axis=-1) + DEFAULT_AUX_WEIGHT * aux
+
+        return BatchedTrainSpec(stack, per_example, self.local_epochs,
+                                self.batch_size, self.lr, self.momentum,
+                                self.decay)
 
     def evaluate(self, params: Any, dataset: Any) -> EvalResult:
         from repro.models.model_api import DEFAULT_AUX_WEIGHT, _token_ce_loss

@@ -1,0 +1,312 @@
+"""Batched in-graph FEL engine — one jitted program per BCFL round.
+
+The paper-faithful reference loop (``BHFLRuntime._run_fel``) runs a Python
+quadruple loop — clusters × clients × fel_iterations × batches — of tiny
+jit dispatches with host-side FedAvg between iterations. This module turns
+the whole FEL phase of a round into ONE device program:
+
+* every cluster's client shards are stacked into padded ``(C, n_max, ...)``
+  device arrays (per-client sizes masked),
+* one client's local SGD is a ``lax.scan`` over its epochs × batches,
+* ``jax.vmap`` maps it across the C clients of a cluster,
+* FedAvg (Eq. 1 at the edge) is a masked weighted reduction in-graph,
+* ``lax.scan`` drives the ``fel_iterations`` train→aggregate cycles, and
+* an outer ``jax.vmap`` maps the whole cluster round across the N clusters,
+
+so one call produces the stacked flat ``(N, D)`` model matrix W(k) that
+Model Evaluation consumes directly — no per-model flatten, no host hops.
+
+Numerical contract: with the same seeds the engine reproduces the
+reference loop step for step — identical batch permutations (the same
+numpy RNG stream, precomputed host-side into an index tensor), identical
+dropout masks (``models.mlp.dropout_mask`` is batch-position-stable), an
+identical per-client PRNG split sequence (masked padding steps do not
+advance the key or the decay step counter), and FedAvg weights that zero
+out padded/empty clients exactly. ``tests/test_batched_fel.py`` pins the
+two paths against each other, including ragged/empty shards and the
+plagiarist path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.serialization import flatten_pytree, unflatten_pytree_device
+from repro.fl.hierarchy import FELCluster
+
+
+@dataclass(frozen=True)
+class BatchedTrainSpec:
+    """What the engine needs from a ``ModelAdapter`` to train in-graph.
+
+    ``stack`` turns one client dataset into a sample-major pytree of numpy
+    arrays (leading axis = samples; empty shards yield 0-row arrays of the
+    same structure). ``per_example_loss(params, batch, key) -> (B,)``
+    returns per-sample losses for a gathered batch pytree — the engine
+    reduces them with the padding mask, so padded rows must simply be
+    finite (they are multiplied by zero).
+    """
+
+    stack: Callable[[Any], Any]
+    per_example_loss: Callable[[Any, Any, jax.Array], jax.Array]
+    local_epochs: int
+    batch_size: int
+    lr: float
+    momentum: float
+    decay: float
+
+
+class BatchedFELEngine:
+    """Compiles the FEL phase of a BCFL round into one device program.
+
+    Built once per runtime (shapes are fixed by the hierarchy); per round
+    only the batch-permutation index tensor and the per-client seeds
+    change, so every round reuses a single compiled executable.
+    """
+
+    def __init__(self, clusters: List[FELCluster], spec: BatchedTrainSpec,
+                 fel_iterations: int, template_params: Any):
+        if fel_iterations < 1:
+            raise ValueError(f"fel_iterations must be >= 1, got {fel_iterations}")
+        self.spec = spec
+        self.fel_iterations = int(fel_iterations)
+        self.n_clusters = len(clusters)
+        self.n_clients = max((len(c.clients) for c in clusters), default=0)
+        if self.n_clusters == 0 or self.n_clients == 0:
+            raise ValueError("batched engine needs at least one cluster "
+                             "with at least one client")
+        self._template = template_params
+
+        N, C, E = self.n_clusters, self.n_clients, spec.local_epochs
+        sizes = np.zeros((N, C), np.int64)
+        client_ids = np.zeros((N, C), np.int64)
+        for n, cluster in enumerate(clusters):
+            for c, client in enumerate(cluster.clients):
+                sizes[n, c] = client.data_size
+                client_ids[n, c] = client.client_id
+        self._sizes = sizes
+        self._client_ids = client_ids
+
+        # per-client batch size / step count (reference semantics:
+        # bs = min(batch_size, size), drop-remainder batching, E epochs)
+        bs = np.where(sizes > 0, np.minimum(spec.batch_size, sizes), 1)
+        nb = np.where(sizes > 0, sizes // bs, 0)
+        steps = E * nb
+        self._bs = bs.astype(np.int32)
+        self._nb = nb
+        self.steps_per_iteration = int(max(1, steps.max()))
+        self.batch_pad = int(bs.max())
+
+        T, B = self.steps_per_iteration, self.batch_pad
+        stepmask = np.zeros((N, C, T), bool)
+        for n in range(N):
+            for c in range(C):
+                stepmask[n, c, : steps[n, c]] = True
+        self._stepmask = jnp.asarray(stepmask)
+        # static fast path: uniform shards (every client runs every step at
+        # full batch width) need none of the per-step masking selects
+        self._uniform = bool(stepmask.all()) and bool((bs == B).all())
+
+        # stack client shards into padded (N, C, n_max, ...) device leaves
+        proto = None
+        for cluster in clusters:
+            for client in cluster.clients:
+                if client.data_size > 0:
+                    proto = spec.stack(client.data)
+                    break
+            if proto is not None:
+                break
+        if proto is None:
+            raise ValueError("batched engine needs at least one non-empty "
+                             "client shard")
+        self.n_max = int(max(1, sizes.max()))
+
+        def padded(client) -> Any:
+            stacked = (spec.stack(client.data) if client is not None
+                       else jax.tree.map(lambda a: a[:0], proto))
+            def pad(leaf):
+                leaf = np.asarray(leaf)
+                out = np.zeros((self.n_max,) + leaf.shape[1:], leaf.dtype)
+                out[: leaf.shape[0]] = leaf
+                return out
+            return jax.tree.map(pad, stacked)
+
+        rows = []
+        for cluster in clusters:
+            cl = list(cluster.clients) + [None] * (C - len(cluster.clients))
+            rows.append(jax.tree.map(lambda *ls: np.stack(ls),
+                                     *[padded(cli) for cli in cl]))
+        self._data = jax.tree.map(lambda *ls: jnp.asarray(np.stack(ls)), *rows)
+        self._sizes_f = jnp.asarray(sizes, jnp.float32)
+        self._bs_dev = jnp.asarray(self._bs)
+
+        self._round_fn = jax.jit(self._build_round_fn())
+
+    # -- the single-device-program round ------------------------------------
+    def _build_round_fn(self):
+        spec = self.spec
+        template = self._template
+        data = self._data
+        sizes_f = self._sizes_f
+        bs_dev = self._bs_dev
+        stepmask = self._stepmask
+        B = self.batch_pad
+
+        uniform = self._uniform
+        T, I = self.steps_per_iteration, self.fel_iterations
+        unroll_steps = True if T == 1 else 1
+        unroll_iters = True if (T == 1 and I <= 8) else 1
+
+        def train_client(params, data_c, bs_c, idx_c, smask_c, seed):
+            """lax.scan over this client's epochs × batches. Padding steps
+            (smask False) advance neither params, momentum, the decay step
+            counter, nor the PRNG key — exactly the reference loop. When
+            every shard is uniform (no padding steps, full batch width —
+            checked statically at engine build) the masking selects
+            disappear from the compiled program entirely."""
+            key0 = jax.random.key(seed)
+            mom0 = jax.tree.map(jnp.zeros_like, params)
+
+            def step(carry, xs):
+                p, mom, t, key = carry
+                sel, real = xs
+                nkey, sub = jax.random.split(key)
+                batch = jax.tree.map(lambda a: a[sel], data_c)
+
+                def loss_fn(pp):
+                    pe = spec.per_example_loss(pp, batch, sub)
+                    if uniform:
+                        return jnp.mean(pe)
+                    m = ((jnp.arange(B) < bs_c) & real).astype(jnp.float32)
+                    return jnp.sum(pe * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+                loss, grads = jax.value_and_grad(loss_fn)(p)
+                # sgd_update semantics: keras-style time-based decay
+                lr_t = spec.lr / (1.0 + spec.decay * t.astype(jnp.float32))
+                nmom = jax.tree.map(lambda m_, g: spec.momentum * m_ + g,
+                                    mom, grads)
+                newp = jax.tree.map(lambda a, m_: a - lr_t * m_, p, nmom)
+                if uniform:
+                    p, mom = newp, nmom
+                    t = t + 1
+                    key = nkey
+                else:
+                    p = jax.tree.map(
+                        lambda new, old: jnp.where(real, new, old), newp, p)
+                    mom = jax.tree.map(
+                        lambda new, old: jnp.where(real, new, old), nmom, mom)
+                    t = t + real.astype(jnp.int32)
+                    key = jnp.where(real, nkey, key)
+                return (p, mom, t, key), loss
+
+            init = (params, mom0, jnp.zeros((), jnp.int32), key0)
+            # unrolling pays only when the while-loop overhead dominates
+            # (single-step iterations); at larger T it just inflates
+            # compile time for no runtime win
+            (pf, _, _, _), _ = jax.lax.scan(step, init, (idx_c, smask_c),
+                                            unroll=unroll_steps)
+            return pf
+
+        def train_cluster(params0, data_n, sizes_n, bs_n, idx_n, smask_n,
+                          seeds_n):
+            """fel_iterations × (vmap clients → masked FedAvg), in-graph."""
+
+            def fel_iter(params, xs):
+                idx_i, seeds_i = xs
+                locals_ = jax.vmap(train_client,
+                                   in_axes=(None, 0, 0, 0, 0, 0))(
+                    params, data_n, bs_n, idx_i, smask_n, seeds_i)
+                # Eq. 1 at the edge: data-size weights; empty/padded
+                # clients carry exact zero weight so they drop out of the
+                # reduction bit-for-bit
+                tot = jnp.sum(sizes_n)
+                lam = sizes_n / jnp.maximum(tot, 1.0)
+                avg = jax.tree.map(
+                    lambda l: jnp.einsum(
+                        "c,c...->...", lam,
+                        l.astype(jnp.float32)).astype(l.dtype),
+                    locals_)
+                # a dataless cluster keeps the incoming global model; its
+                # consensus weight (|DS_m| = 0) already zeroes it in Eq. 1
+                params = jax.tree.map(lambda a, p: jnp.where(tot > 0, a, p),
+                                      avg, params)
+                return params, None
+
+            final, _ = jax.lax.scan(fel_iter, params0, (idx_n, seeds_n),
+                                    unroll=unroll_iters)
+            return flatten_pytree(final)
+
+        def round_fn(global_flat, idx, seeds):
+            # train in float32: the reference loop's SGD update promotes
+            # low-precision (bf16) params to f32 after the first step
+            # anyway, and a lax.scan carry needs one stable dtype
+            params0 = jax.tree.map(lambda l: l.astype(jnp.float32),
+                                   unflatten_pytree_device(global_flat,
+                                                           template))
+            # (I, N, ...) -> (N, I, ...): the cluster vmap is outermost,
+            # the fel_iterations scan runs inside it
+            idx_n = jnp.swapaxes(idx, 0, 1)
+            seeds_n = jnp.swapaxes(seeds, 0, 1)
+            return jax.vmap(train_cluster,
+                            in_axes=(None, 0, 0, 0, 0, 0, 0))(
+                params0, data, sizes_f, bs_dev, idx_n, stepmask, seeds_n)
+
+        return round_fn
+
+    # -- host-side per-round prep (cheap: numpy permutations only) -----------
+    def _batch_plan(self, round_seed: int) -> tuple[np.ndarray, np.ndarray]:
+        """Replicates the reference batch stream: per (iteration, client,
+        epoch) the same ``np.random.default_rng(seed + ep).permutation``
+        and the same drop-remainder windows, flattened into an index
+        tensor (I, N, C, T, B) plus per-client key seeds (I, N, C)."""
+        I, N, C = self.fel_iterations, self.n_clusters, self.n_clients
+        T, B, E = self.steps_per_iteration, self.batch_pad, self.spec.local_epochs
+        idx = np.zeros((I, N, C, T, B), np.int32)
+        seeds = np.zeros((I, N, C), np.int64)
+        for it in range(I):
+            for n in range(N):
+                for c in range(C):
+                    seed = round_seed * 1000 + int(self._client_ids[n, c]) * 10 + it
+                    seeds[it, n, c] = seed
+                    size = int(self._sizes[n, c])
+                    if size == 0:
+                        continue
+                    bs = int(self._bs[n, c])
+                    t = 0
+                    for ep in range(E):
+                        order = np.random.default_rng(seed + ep).permutation(size)
+                        for s in range(0, size - bs + 1, bs):
+                            idx[it, n, c, t, :bs] = order[s:s + bs]
+                            t += 1
+        return idx, seeds
+
+    def run_round(self, global_flat: jax.Array, round_seed: int) -> jax.Array:
+        """One FEL phase: (D,) global model → stacked (N, D) W(k), all on
+        device; one compiled-program dispatch."""
+        idx, seeds = self._batch_plan(round_seed)
+        i32 = np.iinfo(np.int32)
+        if np.any(seeds > i32.max) or np.any(seeds < i32.min):
+            raise ValueError(
+                f"per-client seed overflows int32 (round_seed={round_seed}); "
+                "keep cfg.seed * 1000 + rounds within int32 range")
+        return self._round_fn(jnp.asarray(global_flat),
+                              jnp.asarray(idx),
+                              jnp.asarray(seeds, jnp.int32))
+
+
+def engine_for(adapter: Any, clusters: List[FELCluster], fel_iterations: int,
+               template_params: Any) -> Optional[BatchedFELEngine]:
+    """Build a :class:`BatchedFELEngine` if ``adapter`` exposes a
+    ``batched_train_spec()``; None when the adapter has no batched path."""
+    spec_fn = getattr(adapter, "batched_train_spec", None)
+    if spec_fn is None:
+        return None
+    spec = spec_fn()
+    if spec is None:
+        return None
+    return BatchedFELEngine(clusters, spec, fel_iterations, template_params)

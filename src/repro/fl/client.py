@@ -9,6 +9,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.data.synthetic import SyntheticImageDataset
 from repro.models.mlp import MLPConfig, mlp_loss
@@ -27,12 +28,21 @@ class Client:
 
 @partial(jax.jit, static_argnames=("cfg",))
 def _sgd_step(params: Any, opt_state, x, y, key, cfg: MLPConfig,
-              lr: float, momentum: float, decay: float):
+              lr, momentum, decay):
     loss, grads = jax.value_and_grad(mlp_loss)(
         params, x, y, cfg=cfg, train=True, dropout_key=key)
     params, opt_state = sgd_update(grads, opt_state, params,
                                    lr=lr, momentum=momentum, decay=decay)
     return params, opt_state, loss
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _sgd_step_gather(params: Any, opt_state, xd, yd, sel, key, cfg: MLPConfig,
+                     lr, momentum, decay):
+    """Same step, but the batch gather happens on device: ``xd``/``yd`` are
+    the client's whole shard (resident once), ``sel`` the batch indices."""
+    return _sgd_step(params, opt_state, xd[sel], yd[sel], key, cfg,
+                     lr, momentum, decay)
 
 
 def local_train(params: Any, client: Client, cfg: MLPConfig, *,
@@ -42,16 +52,46 @@ def local_train(params: Any, client: Client, cfg: MLPConfig, *,
     """Run `epochs` of local SGD from `params`; returns (new_params, last_loss).
 
     Callers must skip empty clients (``BHFLRuntime._run_fel`` does); an
-    empty shard here raises via ``dataset.batches``'s batch-size check.
+    empty shard raises here.
+
+    Hyperparameters are passed to the jitted step as traced f32 scalars, so
+    sweeps over lr/momentum/decay reuse one compiled executable; the shard
+    is device-resident once per call (batches gather on device) instead of
+    shipping every mini-batch across the host boundary.
     """
+    if client.data_size == 0:
+        raise ValueError(
+            f"client {client.client_id} has an empty shard; callers must "
+            "skip empty clients (batch_size must be positive)")
     opt_state = sgd_init(params)
     key = jax.random.key(seed)
+    # traced, not static: distinct values hit the same compiled step
+    lr_t = jnp.float32(lr)
+    mom_t = jnp.float32(momentum)
+    dec_t = jnp.float32(decay)
     loss = jnp.asarray(0.0)
+    bs = min(batch_size, client.data_size)
+    data = client.data
+    if hasattr(data, "x") and hasattr(data, "y"):
+        # fast path: whole shard on device once, per-batch gather in-graph.
+        # Batch contents/order are identical to data.batches(bs, seed):
+        # same per-epoch permutation, same drop-remainder windows.
+        xd = jnp.asarray(data.x)
+        yd = jnp.asarray(data.y)
+        n = client.data_size
+        for ep in range(epochs):
+            order = np.random.default_rng(seed + ep).permutation(n)
+            for s in range(0, n - bs + 1, bs):
+                sel = jnp.asarray(order[s:s + bs])
+                key, sub = jax.random.split(key)
+                params, opt_state, loss = _sgd_step_gather(
+                    params, opt_state, xd, yd, sel, sub, cfg,
+                    lr_t, mom_t, dec_t)
+        return params, float(loss)
     for ep in range(epochs):
-        for x, y in client.data.batches(min(batch_size, client.data_size),
-                                        seed=seed + ep):
+        for x, y in data.batches(bs, seed=seed + ep):
             key, sub = jax.random.split(key)
             params, opt_state, loss = _sgd_step(
                 params, opt_state, jnp.asarray(x), jnp.asarray(y), sub, cfg,
-                lr, momentum, decay)
+                lr_t, mom_t, dec_t)
     return params, float(loss)

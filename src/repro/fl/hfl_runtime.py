@@ -14,6 +14,19 @@ supplies init / local-train / eval / flatten / unflatten, so the same
 consensus path drives the paper's MNIST MLP, a transformer, or an RWKV6
 LM. Attack simulation hooks (plagiarists / bribery voters) are injected
 here so the paper's §7 experiments run against the same code path.
+
+Two FEL engines produce W(k) (``BHFLConfig.engine``):
+
+* ``"reference"`` — the paper-shaped per-client Python loop (one jit
+  dispatch per SGD step, host-side FedAvg between iterations);
+* ``"batched"``  — the in-graph engine (``repro.fl.batched_fel``): the
+  whole cluster round is ONE jitted program emitting the stacked flat
+  (N, D) matrix, models stay in flat form on device across rounds, and
+  gw(k) is adopted without a flatten→host→unflatten roundtrip;
+* ``"auto"``     — batched when the adapter supports it, else reference.
+
+The two engines are pinned numerically against each other in
+``tests/test_batched_fel.py``.
 """
 
 from __future__ import annotations
@@ -22,14 +35,18 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.btsv import BTSVConfig
 from repro.core.consensus import ConsensusRecord, PoFELConsensus
+from repro.core.serialization import flatten_pytree, unflatten_pytree_device
 from repro.fl.adapters import MLPAdapter, ModelAdapter
 from repro.fl.fedavg import fedavg
 from repro.fl.hierarchy import FELCluster
 from repro.models.mlp import MLPConfig
+
+ENGINES = ("reference", "batched", "auto")
 
 
 @dataclass
@@ -46,6 +63,7 @@ class BHFLConfig:
     btsv: BTSVConfig = field(default_factory=BTSVConfig)
     g_max: float = 0.99
     seed: int = 0
+    engine: str = "reference"       # "reference" | "batched" | "auto"
 
     def default_adapter(self) -> ModelAdapter:
         """The paper's workload: the MNIST MLP with §7.1 hyperparameters."""
@@ -80,6 +98,9 @@ class BHFLRuntime:
                  test_set: Optional[Any] = None,
                  adapter: Optional[ModelAdapter] = None):
         assert len(clusters) == cfg.n_nodes
+        if cfg.engine not in ENGINES:
+            raise ValueError(f"unknown engine {cfg.engine!r}; "
+                             f"choose from {ENGINES}")
         self.clusters = clusters
         self.cfg = cfg
         self.test_set = test_set
@@ -92,13 +113,53 @@ class BHFLRuntime:
         # vote hooks handled at consensus time)
         self.plagiarists: set[int] = set()
         self.vote_hook: Optional[Callable] = None
+        # -- FEL engine selection -------------------------------------------
+        self._engine = None
+        self._global_flat: Optional[jax.Array] = None
+        if cfg.engine in ("batched", "auto"):
+            from repro.fl.batched_fel import engine_for
+            try:
+                self._engine = engine_for(self.adapter, clusters,
+                                          cfg.fel_iterations,
+                                          self.global_params)
+            except ValueError:
+                # degenerate hierarchy (e.g. every shard empty): 'auto'
+                # falls back to the reference loop, 'batched' surfaces it
+                if cfg.engine == "batched":
+                    raise
+                self._engine = None
+            if self._engine is None and cfg.engine == "batched":
+                raise ValueError(
+                    f"engine='batched' requires the adapter to provide "
+                    f"batched_train_spec(); "
+                    f"{getattr(self.adapter, 'name', type(self.adapter).__name__)!r} "
+                    f"does not — use engine='auto' to fall back")
+            if self._engine is not None:
+                # models live in stacked flat form on device across rounds
+                self._global_flat = flatten_pytree(self.global_params)
+
+    @property
+    def engine(self) -> str:
+        """Which FEL engine actually runs ('reference' or 'batched')."""
+        return "batched" if self._engine is not None else "reference"
+
+    @property
+    def global_params(self) -> Any:
+        return self._global_params
+
+    @global_params.setter
+    def global_params(self, value: Any) -> None:
+        # keep the batched engine's device-resident flat state in sync so
+        # external warm-starts (rt.global_params = ...) take effect there
+        self._global_params = value
+        if getattr(self, "_engine", None) is not None:
+            self._global_flat = flatten_pytree(value)
 
     def _check_adapter_layout(self) -> None:
         """ME produces gw(k) in the canonical sorted-keypath layout and the
         runtime adopts it through ``adapter.unflatten``, so an adapter whose
         flatten deviates from that layout would silently scramble weights
         every round. Catch it once, at init."""
-        from repro.core.serialization import flatten_pytree
         probe = np.asarray(self.adapter.flatten(self.global_params))
         canonical = np.asarray(flatten_pytree(self.global_params))
         if probe.shape != canonical.shape or not np.array_equal(probe,
@@ -110,7 +171,7 @@ class BHFLRuntime:
                 "core.serialization.flatten_pytree (inherit them from the "
                 "adapter base class)")
 
-    # -- one FEL phase inside cluster `c` -----------------------------------
+    # -- one FEL phase inside cluster `c` (reference engine) -----------------
     def _run_fel(self, cluster: FELCluster, start_params: Any, round_seed: int) -> Any:
         params = start_params
         for it in range(self.cfg.fel_iterations):
@@ -130,6 +191,31 @@ class BHFLRuntime:
             params = fedavg(locals_, sizes)
         return params
 
+    # -- W(k) production, per engine ----------------------------------------
+    def _fel_models_reference(self, round_seed: int) -> List[Any]:
+        models: List[Any] = []
+        for cluster in self.clusters:
+            if cluster.node_id in self.plagiarists:
+                models.append(None)  # filled in below by copying a victim
+            else:
+                models.append(self._run_fel(cluster, self.global_params,
+                                            round_seed=round_seed))
+        # plagiarists copy the first honest model they "received"
+        honest_ids = [i for i, m in enumerate(models) if m is not None]
+        for i, m in enumerate(models):
+            if m is None:
+                victim = honest_ids[0]
+                models[i] = jax.tree.map(lambda x: x, models[victim])
+        return models
+
+    def _fel_models_batched(self, round_seed: int) -> List[Any]:
+        """One jitted program → stacked (N, D) W(k); rows feed consensus
+        directly (a flat vector is itself a valid model pytree)."""
+        W = self._engine.run_round(self._global_flat, round_seed)
+        flags = [c.node_id in self.plagiarists for c in self.clusters]
+        victim = flags.index(False)   # first honest, as in the reference path
+        return [W[victim] if f else W[i] for i, f in enumerate(flags)]
+
     # -- one BCFL round ------------------------------------------------------
     def run_round(self) -> RoundMetrics:
         cfg = self.cfg
@@ -139,26 +225,25 @@ class BHFLRuntime:
             raise AllNodesPlagiarizeError(
                 f"all {cfg.n_nodes} nodes are plagiarists — at least one "
                 f"honest node must train a model for round {k}")
-        models: List[Any] = []
-        for cluster in self.clusters:
-            if cluster.node_id in self.plagiarists:
-                models.append(None)  # filled in below by copying a victim
-            else:
-                models.append(self._run_fel(cluster, self.global_params,
-                                            round_seed=cfg.seed + k + 1))
-        # plagiarists copy the first honest model they "received"
-        honest_ids = [i for i, m in enumerate(models) if m is not None]
-        for i, m in enumerate(models):
-            if m is None:
-                victim = honest_ids[0]
-                models[i] = jax.tree.map(lambda x: x, models[victim])
+        round_seed = cfg.seed + k + 1
+        if self._engine is not None:
+            models = self._fel_models_batched(round_seed)
+        else:
+            models = self._fel_models_reference(round_seed)
 
         sizes = [float(c.data_size) for c in self.clusters]
         record = self.consensus.run_round(models, sizes, vote_hook=self.vote_hook)
 
         # adopt gw(k) as the next global model
-        self.global_params = self.adapter.unflatten(record.global_model,
-                                                    self.global_params)
+        if self._engine is not None:
+            # stays on device: flat form is the canonical round state
+            # (bypass the syncing setter — both forms are set right here)
+            self._global_flat = jnp.asarray(record.global_model)
+            self._global_params = unflatten_pytree_device(self._global_flat,
+                                                          self.global_params)
+        else:
+            self.global_params = self.adapter.unflatten(record.global_model,
+                                                        self.global_params)
 
         acc, loss = float("nan"), float("nan")
         if self.test_set is not None:

@@ -47,10 +47,35 @@ def _cosine_partials_kernel(w_ref, g_ref, dot_ref, wsq_ref, gsq_ref):
         gsq_ref[...] += jnp.sum(g * g, axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "block_d", "interpret"))
+def interpret_default() -> bool:
+    """Compiled (Mosaic) on TPU, interpret mode everywhere else.
+
+    These kernels accumulate into output refs revisited across the grid
+    (``dot_ref[...] +=`` over the D dimension), which is only well-defined
+    where the grid executes sequentially — i.e. on TPU. A Triton (GPU)
+    lowering would race on the accumulators (and the sibling wkv6/flash
+    kernels use TPU-only ``pltpu`` scratch), so GPU stays on interpret
+    unless a caller overrides ``interpret=`` explicitly.
+    """
+    return jax.default_backend() != "tpu"
+
+
 def cosine_partials(W: jax.Array, gw: jax.Array, *, block_n: int = 8,
-                    block_d: int = 512, interpret: bool = True):
-    """(N, D), (D,) → (dot (N,), wsq (N,), gsq ()) in one fused pass."""
+                    block_d: int = 512, interpret: bool | None = None):
+    """(N, D), (D,) → (dot (N,), wsq (N,), gsq ()) in one fused pass.
+
+    ``interpret=None`` (the default) resolves per backend via
+    :func:`interpret_default`; pass an explicit bool to override.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    return _cosine_partials(W, gw, block_n=block_n, block_d=block_d,
+                            interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_d", "interpret"))
+def _cosine_partials(W: jax.Array, gw: jax.Array, *, block_n: int = 8,
+                     block_d: int = 512, interpret: bool = True):
     N, D = W.shape
     bn = min(block_n, N)
     bd = min(block_d, D)

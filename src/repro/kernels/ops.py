@@ -18,7 +18,10 @@ from repro.kernels import wkv6 as _wkv
 
 
 def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
+    # compiled on TPU only — see cosine_sim.interpret_default for why GPU
+    # cannot run these kernels compiled (grid-sequential accumulation,
+    # pltpu scratch)
+    return _cs.interpret_default()
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

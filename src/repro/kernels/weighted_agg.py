@@ -24,10 +24,26 @@ def _weighted_agg_kernel(w_ref, lam_ref, out_ref):
     out_ref[...] = (lam @ w)[0]                 # (bd,)
 
 
-@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
 def weighted_aggregate(W: jax.Array, weights: jax.Array, *,
-                       block_d: int = 2048, interpret: bool = True) -> jax.Array:
-    """(N, D), (N,) → (D,) normalized weighted aggregate."""
+                       block_d: int = 2048,
+                       interpret: bool | None = None) -> jax.Array:
+    """(N, D), (N,) → (D,) normalized weighted aggregate.
+
+    ``interpret=None`` resolves per backend via
+    :func:`repro.kernels.cosine_sim.interpret_default` (compiled on TPU,
+    interpreted elsewhere — including GPU, since the kernels use TPU-only
+    scratch); pass an explicit bool to override.
+    """
+    if interpret is None:
+        from repro.kernels.cosine_sim import interpret_default
+        interpret = interpret_default()
+    return _weighted_aggregate(W, weights, block_d=block_d,
+                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def _weighted_aggregate(W: jax.Array, weights: jax.Array, *,
+                        block_d: int = 2048, interpret: bool = True) -> jax.Array:
     N, D = W.shape
     lam = weights.astype(jnp.float32)
     lam = (lam / jnp.sum(lam)).reshape(1, N)

@@ -28,22 +28,43 @@ def mlp_init(cfg: MLPConfig, key: jax.Array) -> dict:
     }
 
 
+def dropout_mask(key: jax.Array, keep: float, shape: tuple) -> jax.Array:
+    """Batch-position-stable dropout mask: row i's bits depend only on
+    (key, i), never on the batch extent, so a padded batch draws the
+    identical mask for the rows that also exist in the unpadded batch.
+    This is what lets the batched FEL engine (padded (C, B, ...) shards)
+    and the per-client reference loop agree numerically per SGD step."""
+    rows = jnp.arange(shape[0])
+    return jax.vmap(
+        lambda i: jax.random.bernoulli(jax.random.fold_in(key, i), keep,
+                                       shape[1:]))(rows)
+
+
 def mlp_apply(params: dict, x: jax.Array, *, cfg: MLPConfig,
               train: bool = False, dropout_key: jax.Array | None = None) -> jax.Array:
     h = jax.nn.relu(x @ params["w1"] + params["b1"])
     if train and cfg.dropout > 0.0:
         assert dropout_key is not None
         keep = 1.0 - cfg.dropout
-        mask = jax.random.bernoulli(dropout_key, keep, h.shape)
+        mask = dropout_mask(dropout_key, keep, h.shape)
         h = jnp.where(mask, h / keep, 0.0)
     return h @ params["w2"] + params["b2"]  # logits; softmax folded into loss
 
 
-def mlp_loss(params: dict, x: jax.Array, y: jax.Array, *, cfg: MLPConfig,
-             train: bool = False, dropout_key: jax.Array | None = None) -> jax.Array:
+def mlp_per_example_loss(params: dict, x: jax.Array, y: jax.Array, *,
+                         cfg: MLPConfig, train: bool = False,
+                         dropout_key: jax.Array | None = None) -> jax.Array:
+    """(B,) per-sample cross-entropies — the masked-mean building block the
+    batched FEL engine reduces over padded batches."""
     logits = mlp_apply(params, x, cfg=cfg, train=train, dropout_key=dropout_key)
     logp = jax.nn.log_softmax(logits)
-    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    return -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+
+
+def mlp_loss(params: dict, x: jax.Array, y: jax.Array, *, cfg: MLPConfig,
+             train: bool = False, dropout_key: jax.Array | None = None) -> jax.Array:
+    return jnp.mean(mlp_per_example_loss(params, x, y, cfg=cfg, train=train,
+                                         dropout_key=dropout_key))
 
 
 def mlp_accuracy(params: dict, x: jax.Array, y: jax.Array, *, cfg: MLPConfig) -> jax.Array:
