@@ -79,6 +79,41 @@ def bench_reveal_stage() -> None:
             emit(f"hcds_reveal/h{hidden}/N{n}", us, f"per_node={us/(n-1):.1f}us")
 
 
+def bench_scalar_mul_backends() -> None:
+    """Before/after for the windowed-table optimization (ROADMAP: pure-Python
+    ECDSA dominates the consensus share of a round).
+
+    * ``naive``    — double-and-add, the pre-optimization baseline;
+    * ``windowed`` — 4-bit fixed-window table (the live path for the base
+      point and, via the per-key cache, for repeated verifies);
+    * ``verify_cold/warm`` — DVerify with an empty vs populated public-key
+      table cache (one consensus round re-verifies each key O(N) times, so
+      the warm number is the steady-state cost).
+    """
+    kp = crypto.ECDSAKeyPair.generate(b"bench")
+    k = kp.private_key
+    us = time_call(lambda: crypto._point_mul_naive(k, (crypto._GX, crypto._GY)),
+                   repeats=10)
+    emit("ecdsa_point_mul/naive", us)
+    table = crypto._g_table()
+    us_w = time_call(lambda: crypto._point_mul_windowed(k, table), repeats=10)
+    emit("ecdsa_point_mul/windowed", us_w, f"speedup={us/us_w:.1f}x")
+
+    d = crypto.sha256_digest(b"digest")
+    tag = crypto.dsign(d, k)
+
+    def verify_cold():
+        crypto._PK_TABLES.clear()
+        assert crypto.dverify(tag, kp.public_key, d)
+
+    us_cold = time_call(verify_cold, repeats=5)
+    emit("ecdsa_verify/cold_cache", us_cold)
+    assert crypto.dverify(tag, kp.public_key, d)  # populate the cache
+    us_warm = time_call(lambda: crypto.dverify(tag, kp.public_key, d),
+                        repeats=10)
+    emit("ecdsa_verify/warm_cache", us_warm, f"speedup={us_cold/us_warm:.1f}x")
+
+
 def bench_full_round_protocol() -> None:
     """End-to-end HCDS round among N in-process nodes (beyond-paper)."""
     from repro.core.hcds import run_hcds_round
@@ -97,6 +132,7 @@ def main() -> None:
     bench_commit_stage()
     bench_dverify_vs_network()
     bench_reveal_stage()
+    bench_scalar_mul_backends()
     bench_full_round_protocol()
 
 

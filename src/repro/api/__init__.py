@@ -30,6 +30,8 @@ MLP, zipf token streams for LMs).
 
 from __future__ import annotations
 
+import dataclasses
+import difflib
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -78,6 +80,8 @@ class BHFLRun:
     rewards: RewardLedger
     runtime: BHFLRuntime
     history: List[RoundMetrics] = field(default_factory=list)
+    # set when the run was driven through a repro.sim scenario/fault env
+    scenario_report: Optional[Any] = None
 
     @property
     def chain_height(self) -> int:
@@ -98,6 +102,40 @@ def _default_task(max_rounds: int) -> LearningTask:
         task_id="bhfl-task-0", publisher_id="model-owner-0",
         description="BHFL learning task (repro.api default)",
         target_loss=0.0, max_rounds=max_rounds, block_reward=10.0)
+
+
+# every keyword run_bhfl itself accepts, for the did-you-mean hint
+_RUN_BHFL_KWARGS = frozenset((
+    "task", "model", "data", "cfg", "n_nodes", "clients_per_node",
+    "fel_iterations", "rounds", "engine", "distribution", "gamma", "mu",
+    "seed", "vote_hook", "plagiarists", "on_round", "scenario", "faults"))
+# BHFLConfig fields not already exposed as explicit run_bhfl kwargs
+_CFG_OVERRIDES = frozenset(
+    f.name for f in dataclasses.fields(BHFLConfig)) - _RUN_BHFL_KWARGS
+
+
+def _check_overrides(overrides: Dict[str, Any], cfg_given: bool) -> None:
+    """Reject unknown keyword arguments loudly. A typo'd ``scenario=`` or
+    ``engine=`` silently swallowed by a ``**kwargs`` catch-all would run
+    the ideal world while the caller believes faults are active."""
+    if not overrides:
+        return
+    unknown = set(overrides) - _CFG_OVERRIDES
+    if unknown:
+        hints = []
+        for k in sorted(unknown):
+            close = difflib.get_close_matches(
+                k, sorted(_CFG_OVERRIDES | _RUN_BHFL_KWARGS), n=1)
+            hints.append(k + (f" (did you mean {close[0]!r}?)"
+                              if close else ""))
+        raise TypeError(
+            f"run_bhfl() got unexpected keyword argument(s): "
+            f"{', '.join(hints)}; valid BHFLConfig overrides are "
+            f"{sorted(_CFG_OVERRIDES)}")
+    if cfg_given:
+        raise ValueError(
+            f"config overrides {sorted(overrides)} conflict with an "
+            f"explicit cfg=; set them on the BHFLConfig instead")
 
 
 def _default_data(adapter: ModelAdapter, seed: int) -> Tuple[Any, Any]:
@@ -126,6 +164,9 @@ def run_bhfl(task: Optional[LearningTask] = None,
              vote_hook: Optional[Callable] = None,
              plagiarists: Sequence[int] = (),
              on_round: Optional[Callable[[RoundMetrics], None]] = None,
+             scenario: Optional[Any] = None,
+             faults: Optional[Any] = None,
+             **overrides: Any,
              ) -> BHFLRun:
     """Publish → negotiate → build hierarchy → run PoFEL rounds → settle.
 
@@ -149,15 +190,50 @@ def run_bhfl(task: Optional[LearningTask] = None,
         rounds: cap on rounds this call (default ``task.max_rounds``).
         gamma/mu: per-node Stackelberg cost/weight parameters (defaults
             match the paper's §7 ranges).
-        seed: governs data synthesis, partitioning, gamma draws, and model
-            init (one seed for the whole run).
+        seed: governs data synthesis, partitioning, gamma draws, model
+            init, and — under a scenario — the network/adversary rng
+            (one seed for the whole run).
         vote_hook/plagiarists: adversary injection (paper §7.4 attacks).
         on_round: callback fired with each round's ``RoundMetrics``.
+        scenario: a ``repro.sim`` scenario name (e.g.
+            ``"byzantine_third"``) or ``Scenario`` object — the run's
+            consensus rounds then travel the fault-injected message bus
+            and the result carries ``run.scenario_report``. The scenario
+            supplies sizing defaults (nodes/clients/rounds/data) that
+            explicit kwargs override.
+        faults: a prebuilt ``repro.sim.SimEnv`` for ad-hoc fault
+            injection without a registered scenario (mutually exclusive
+            with ``scenario``).
+        **overrides: ``BHFLConfig`` training fields forwarded by name
+            (e.g. ``lr=1e-2``, ``batch_size=16``). An unknown name
+            raises ``TypeError`` (with a did-you-mean hint) instead of
+            being silently ignored — a typo'd ``scenario=``/``engine=``
+            must not turn into an unfaulted run.
 
     Returns:
         ``BHFLRun`` with the negotiated agreement, settled rewards, the
-        runtime (consensus, ledgers, phases), and per-round metrics.
+        runtime (consensus, ledgers, phases), per-round metrics, and —
+        for scenario runs — the ``ScenarioReport``.
     """
+    _check_overrides(overrides, cfg_given=cfg is not None)
+    sc = None
+    if scenario is not None:
+        if faults is not None:
+            raise ValueError("pass scenario= or faults=, not both")
+        from repro.sim import Scenario, get_scenario
+        sc = get_scenario(scenario) if isinstance(scenario, str) \
+            else scenario
+        if not isinstance(sc, Scenario):
+            raise TypeError(f"scenario= must be a name or Scenario, "
+                            f"got {type(sc).__name__}")
+        # scenario sizing fills whatever the caller left unspecified
+        if cfg is None:
+            n_nodes = n_nodes if n_nodes is not None else sc.n_nodes
+            clients_per_node = (clients_per_node if clients_per_node
+                                is not None else sc.clients_per_node)
+            fel_iterations = (fel_iterations if fel_iterations is not None
+                              else sc.fel_iterations)
+        rounds = rounds if rounds is not None else sc.rounds
     cfg_given = cfg is not None
     if cfg is None:
         cfg = BHFLConfig(n_nodes=n_nodes if n_nodes is not None else 6,
@@ -178,6 +254,8 @@ def run_bhfl(task: Optional[LearningTask] = None,
                 raise ValueError(
                     f"{kwarg}={val} conflicts with cfg.{kwarg}={cfg_val}; "
                     f"set it on cfg or drop the kwarg")
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
     n_nodes = cfg.n_nodes
     clients_per_node = cfg.clients_per_node
     seed = cfg.seed     # one seed governs data, gamma draws, and init
@@ -218,7 +296,13 @@ def run_bhfl(task: Optional[LearningTask] = None,
 
     # 3. hierarchy over (possibly synthesized) data
     if data is None:
-        data = _default_data(adapter, seed)
+        if sc is not None and isinstance(adapter, MLPAdapter):
+            # scenario sizing: protocol behaviour under faults is the
+            # object of study, so the workload stays small
+            data = make_mnist_like(n_train=sc.n_train, n_test=sc.n_test,
+                                   seed=seed)
+        else:
+            data = _default_data(adapter, seed)
     train, test = data
     if distribution != "iid" and not hasattr(train, "n_classes"):
         raise ValueError(
@@ -232,12 +316,29 @@ def run_bhfl(task: Optional[LearningTask] = None,
     runtime = BHFLRuntime(clusters, cfg, test, adapter=adapter)
     runtime.vote_hook = vote_hook
     runtime.plagiarists = set(plagiarists)
+    env = faults
+    if sc is not None:
+        from repro.sim import build_env
+        env = build_env(sc, n_nodes=cfg.n_nodes, seed=seed)
+    if env is not None:
+        if env.network.n_nodes != cfg.n_nodes:
+            raise ValueError(
+                f"faults/scenario env simulates {env.network.n_nodes} "
+                f"nodes but the run has n_nodes={cfg.n_nodes}")
+        runtime.env = env
+        env.bind(runtime.consensus)
+        runtime.plagiarists |= env.plagiarist_ids()
     run = BHFLRun(task, agreement, rewards, runtime, runtime.history)
     for _ in range(min(max_rounds, task.max_rounds)):
         m = runtime.run_round()
-        rewards.settle_round(m.leader_id)
+        if m.leader_id >= 0:    # aborted rounds reward no leader
+            rewards.settle_round(m.leader_id)
         if on_round is not None:
             on_round(m)
         if test is not None and m.test_loss <= task.target_loss:
             break
+    if env is not None:
+        run.scenario_report = env.finalize(
+            scenario=sc.name if sc is not None else "custom",
+            seed=seed, rounds_requested=len(runtime.history))
     return run

@@ -4,13 +4,23 @@ Verification on append: chain linkage, leader signature, and that the
 claimed leader matches an independent BTSV re-tally (nodes re-run the
 smart contract locally — the consortium-chain analogue of validating a
 block's proof).
+
+Nodes that miss a round (network partition, crash — the fault scenarios
+of ``repro.sim``) converge through two primitives:
+
+* :meth:`Ledger.sync_from` — catch-up sync: validate and append the
+  suffix of a peer's chain beyond our height (a stale-``prev_hash``
+  block, i.e. a peer whose history diverges from ours, is rejected);
+* :meth:`Ledger.fork_choice` — longest-valid-chain rule with a
+  deterministic head-hash tie-break, for adopting a competing chain
+  after rejoining.
 """
 
 from __future__ import annotations
 
 import json
 from pathlib import Path
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.blockchain.block import GENESIS_HASH, Block, block_hash
 from repro.core import crypto
@@ -46,13 +56,61 @@ class Ledger:
             raise InvalidBlock("leader does not match local BTSV re-tally")
         self.blocks.append(block)
 
-    def verify_chain(self) -> bool:
-        prev = GENESIS_HASH
-        for i, b in enumerate(self.blocks):
-            if b.prev_hash != prev or b.index != i:
+    # -- catch-up sync / fork choice ----------------------------------------
+    def sync_from(self, blocks: Sequence[Block],
+                  public_keys: Optional[Dict[int, crypto.Point]] = None,
+                  retally: Optional[Callable[[Block], int]] = None) -> int:
+        """Catch-up sync: append the suffix of ``blocks`` (a peer's chain)
+        beyond our height, fully validated. Returns how many blocks were
+        adopted. Raises :class:`InvalidBlock` if the peer's block at our
+        height does not extend our head (diverged history — resolve with
+        :meth:`fork_choice` instead of blind adoption).
+        """
+        # hash chains: one comparison at the last shared index proves the
+        # whole overlap matches (or exposes a diverged history, even when
+        # the peer's chain is not longer than ours)
+        overlap = min(self.height, len(blocks))
+        if overlap and (block_hash(blocks[overlap - 1])
+                        != block_hash(self.blocks[overlap - 1])):
+            raise InvalidBlock(
+                f"peer history diverges from local chain at height "
+                f"{overlap - 1}")
+        adopted = 0
+        for block in blocks[self.height:]:
+            pk = None
+            if public_keys is not None:
+                pk = public_keys.get(block.leader_id)
+                if pk is None:
+                    raise InvalidBlock(
+                        f"no public key for leader {block.leader_id} at "
+                        f"height {block.index} — refusing unverified sync")
+            self.append(block, leader_pk=pk, retally=retally)
+            adopted += 1
+        return adopted
+
+    def fork_choice(self, blocks: Sequence[Block],
+                    public_keys: Optional[Dict[int, crypto.Point]] = None,
+                    ) -> bool:
+        """Longest-valid-chain rule: adopt ``blocks`` wholesale if it is a
+        valid chain and strictly longer than ours — equal-length ties break
+        toward the lexicographically smaller head hash, so every honest
+        node facing the same candidates picks the same chain. Returns True
+        if the local chain was replaced."""
+        candidate = list(blocks)
+        if not _chain_valid(candidate, public_keys):
+            return False
+        if len(candidate) < len(self.blocks):
+            return False
+        if len(candidate) == len(self.blocks):
+            if not candidate or not self.blocks:
                 return False
-            prev = block_hash(b)
+            if block_hash(candidate[-1]) >= self.head_hash:
+                return False
+        self.blocks = candidate
         return True
+
+    def verify_chain(self) -> bool:
+        return _chain_valid(self.blocks)
 
     # -- persistence --------------------------------------------------------
     def save(self, path: str | Path) -> None:
@@ -73,3 +131,19 @@ class Ledger:
         if not led.verify_chain():
             raise InvalidBlock(f"loaded chain from {path} fails verification")
         return led
+
+
+def _chain_valid(blocks: Sequence[Block],
+                 public_keys: Optional[Dict[int, crypto.Point]] = None) -> bool:
+    """Linkage (+ leader signatures, when keys are supplied) of a candidate
+    chain, without mutating any ledger."""
+    prev = GENESIS_HASH
+    for i, b in enumerate(blocks):
+        if b.prev_hash != prev or b.index != i:
+            return False
+        if public_keys is not None:
+            pk = public_keys.get(b.leader_id)
+            if pk is None or not b.verify_signature(pk):
+                return False
+        prev = block_hash(b)
+    return True

@@ -59,21 +59,48 @@ class VoteTallyContract:
     def ready(self, round: int) -> bool:
         return len(self._pending.get(round, {})) == self.n_nodes
 
-    def tally(self, round: int) -> BTSVResult:
-        """Execute Alg. 4 once all submissions for ``round`` are in."""
+    def tally(self, round: int,
+              min_submissions: Optional[int] = None) -> BTSVResult:
+        """Execute Alg. 4 once enough submissions for ``round`` are in.
+
+        ``min_submissions`` makes the tally quorum-aware (the fault-injected
+        network of ``repro.sim`` loses votes to drops/partitions/churn):
+        with at least that many submissions the tally proceeds, treating
+        absent voters as *neutral* abstentions — a zero one-hot vote row,
+        exclusion from the BTS population means, and a zero BTS score, so
+        a dropped packet never erodes an honest node's cumulative history
+        the way a bad vote would. The default (``None``) keeps the strict
+        all-N contract semantics.
+        """
         if round in self._results:
             return self._results[round]
-        if not self.ready(round):
-            got = len(self._pending.get(round, {}))
-            raise ContractError(f"round {round}: {got}/{self.n_nodes} submissions")
+        expected = self.n_nodes if min_submissions is None else min_submissions
+        got = len(self._pending.get(round, {}))
+        if got < expected:
+            raise ContractError(
+                f"round {round}: {got}/{expected} submissions "
+                f"(of {self.n_nodes} nodes)")
         subs = self._pending[round]
-        votes = jnp.asarray([subs[i].vote for i in range(self.n_nodes)], jnp.int32)
+        uniform = np.full((self.n_nodes,), 1.0 / self.n_nodes, np.float32)
+        votes = jnp.asarray([subs[i].vote if i in subs else -1
+                             for i in range(self.n_nodes)], jnp.int32)
         P = jnp.stack([jnp.asarray(subs[i].predictions, jnp.float32)
+                       if i in subs else uniform       # masked placeholder
                        for i in range(self.n_nodes)])
-        result, self._history = btsv_round(votes, P, self._history, self.cfg)
+        present = None
+        if len(subs) < self.n_nodes:
+            present = jnp.asarray([1.0 if i in subs else 0.0
+                                   for i in range(self.n_nodes)], jnp.float32)
+        result, self._history = btsv_round(votes, P, self._history, self.cfg,
+                                           present=present)
         self._results[round] = result
         del self._pending[round]
         return result
+
+    def drop_round(self, round: int) -> None:
+        """Discard a round's partial submissions (an aborted round — quorum
+        never formed before the timeout — must not poison a retry)."""
+        self._pending.pop(round, None)
 
     def result(self, round: int) -> Optional[BTSVResult]:
         return self._results.get(round)

@@ -45,18 +45,29 @@ def votes_to_matrix(votes: jax.Array, n: int) -> jax.Array:
     return jax.nn.one_hot(votes, n, dtype=jnp.float32)
 
 
-def bts_scores(A: jax.Array, P: jax.Array, cfg: BTSVConfig = BTSVConfig()) -> jax.Array:
-    """Eq. 3-7 — per-node BTS score for one round."""
-    n = A.shape[0]
-    x_bar = jnp.mean(A, axis=0)                                   # (N,)
-    y_bar = jnp.exp(jnp.mean(jnp.log(jnp.maximum(P, cfg.eps)), axis=0))
+def bts_scores(A: jax.Array, P: jax.Array, cfg: BTSVConfig = BTSVConfig(),
+               present: "jax.Array | None" = None) -> jax.Array:
+    """Eq. 3-7 — per-node BTS score for one round.
+
+    ``present`` (an (N,) 0/1 mask, default all-present) restricts the
+    population means to the voters whose submissions actually arrived —
+    a fault-dropped vote must be *neutral*: excluded from x̄/ȳ and scored
+    exactly 0, so network loss never erodes an honest node's CHS the way
+    a bad vote would.
+    """
+    if present is None:
+        present = jnp.ones(A.shape[0], jnp.float32)
+    m = jnp.maximum(jnp.sum(present), 1.0)
+    x_bar = jnp.sum(A * present[:, None], axis=0) / m             # (N,)
+    y_bar = jnp.exp(jnp.sum(present[:, None] *
+                            jnp.log(jnp.maximum(P, cfg.eps)), axis=0) / m)
     log_ratio = jnp.log(jnp.maximum(x_bar, cfg.eps)) - jnp.log(jnp.maximum(y_bar, cfg.eps))
     info = A @ log_ratio                                          # (N,)
     # prediction score: α Σ_j x̄_j log(p_j^i / x̄_j); terms with x̄_j = 0 vanish
     log_p = jnp.log(jnp.maximum(P, cfg.eps))
     log_x = jnp.log(jnp.maximum(x_bar, cfg.eps))
     pred = cfg.alpha * jnp.sum(jnp.where(x_bar > 0, x_bar * (log_p - log_x), 0.0), axis=1)
-    return info + pred
+    return (info + pred) * present
 
 
 def vote_weights(chs: jax.Array, cfg: BTSVConfig = BTSVConfig()) -> jax.Array:
@@ -66,16 +77,21 @@ def vote_weights(chs: jax.Array, cfg: BTSVConfig = BTSVConfig()) -> jax.Array:
 
 @partial(jax.jit, static_argnames=("cfg",))
 def btsv_round(votes: jax.Array, P: jax.Array, score_history: jax.Array,
-               cfg: BTSVConfig = BTSVConfig()) -> tuple[BTSVResult, jax.Array]:
+               cfg: BTSVConfig = BTSVConfig(),
+               present: "jax.Array | None" = None,
+               ) -> tuple[BTSVResult, jax.Array]:
     """One smart-contract tally (Alg. 4).
 
     ``score_history`` is a (c, N) rolling buffer of past scores (zeros when
     unused); it is shifted and returned updated so the caller can thread it
-    through rounds functionally.
+    through rounds functionally. ``present`` masks out voters whose
+    submissions never landed (see :func:`bts_scores`); a vote of ``-1``
+    one-hots to a zero row, so an absent voter neither tallies votes nor
+    collects adjusted ones.
     """
     n = P.shape[0]
     A = votes_to_matrix(votes, n)
-    scores = bts_scores(A, P, cfg)
+    scores = bts_scores(A, P, cfg, present=present)
     chs = jnp.sum(score_history, axis=0) + scores                 # Eq. 8
     wv = vote_weights(chs, cfg)
     advotes = wv @ A                                              # Eq. 10

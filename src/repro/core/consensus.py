@@ -121,8 +121,16 @@ class PoFELConsensus:
     # -- one round -----------------------------------------------------------
     def run_round(self, models: Sequence[Any], data_sizes: Sequence[float],
                   vote_hook: Optional[VoteHook] = None,
+                  env: Optional[Any] = None,
                   ) -> ConsensusRecord:
-        """Alg. 1 for one round k; ``models`` is the list of FEL pytrees."""
+        """Alg. 1 for one round k; ``models`` is the list of FEL pytrees.
+
+        ``env`` (a ``repro.sim.network.SimEnv``) switches every phase into
+        networked mode: messages travel a fault-injected bus, quorums and
+        timeouts apply, and the round may raise
+        :class:`~repro.core.phases.QuorumNotReached` — callers then record
+        the liveness gap and :meth:`skip_round`.
+        """
         ctx = RoundContext(
             round=self.round,
             models=list(models),
@@ -130,6 +138,7 @@ class PoFELConsensus:
             n_nodes=self.n_nodes,
             g_max=self.g_max,
             vote_hook=vote_hook,
+            env=env,
         )
         run_phases(self.phases, ctx,
                    before=self._before_hooks, after=self._after_hooks)
@@ -142,6 +151,14 @@ class PoFELConsensus:
         return ConsensusRecord(ctx.round, ctx.leader, ctx.similarities,
                                ctx.votes, ctx.btsv, ctx.block,
                                gw, ctx.rejected)
+
+    def skip_round(self) -> None:
+        """Advance past a round that failed to reach quorum: discard its
+        partial contract submissions and move the round counter so the
+        next attempt starts clean (the ledgers simply have no block for
+        the skipped round — a recorded liveness gap, not a fork)."""
+        self.contract.drop_round(self.round)
+        self.round += 1
 
     @property
     def chain(self) -> List[Block]:

@@ -15,6 +15,19 @@ either by replacing a phase object in ``consensus.phases`` (e.g. the
 sharded in-graph ME from ``repro.fl.sharded_consensus``) or by
 registering before/after callbacks with ``consensus.add_phase_hook`` —
 instead of monkey-patching a monolithic ``run_round``.
+
+Two execution modes per phase:
+
+* **ideal** (``ctx.env is None``) — every node present, synchronous,
+  lossless: the paper's §7 setting, byte-identical to the pre-sim code;
+* **networked** (``ctx.env`` set) — messages travel a fault-injected
+  discrete-event bus (``repro.sim.network.SimEnv``): commits/reveals can
+  be lost or withheld, a model participates in ME only if a quorum of
+  nodes holds its reveal, the tally proceeds on ≥ quorum votes
+  (abstainers neutral), and BlockMint re-elects down the advote ranking
+  when the elected leader times out. A phase that cannot reach its
+  quorum before the timeout raises :class:`QuorumNotReached` — the
+  driver records a liveness gap and moves to the next round.
 """
 
 from __future__ import annotations
@@ -25,7 +38,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.blockchain.block import Block
-from repro.blockchain.ledger import Ledger
+from repro.blockchain.ledger import InvalidBlock, Ledger
 from repro.blockchain.smart_contract import VoteSubmission, VoteTallyContract
 from repro.core import crypto
 from repro.core.btsv import BTSVResult
@@ -37,6 +50,11 @@ from repro.core.serialization import serialize_pytree
 VoteHook = Callable[[int, int, np.ndarray], tuple[int, np.ndarray]]
 # callback fired around a phase: fn(phase_name, ctx)
 PhaseHook = Callable[[str, "RoundContext"], None]
+
+
+class QuorumNotReached(RuntimeError):
+    """A networked phase timed out below its quorum — the round cannot
+    complete (liveness gap). The driver should skip to the next round."""
 
 
 @dataclass
@@ -53,9 +71,15 @@ class RoundContext:
     n_nodes: int
     g_max: float = 0.99
     vote_hook: Optional[VoteHook] = None
+    # networked mode: the fault-injected message bus + adversaries
+    # (duck-typed ``repro.sim.network.SimEnv``); None = ideal synchronous
+    env: Optional[Any] = None
 
     # CommitReveal
     rejected: Dict[int, str] = field(default_factory=dict)
+    # networked CommitReveal: ids whose model reached a quorum of nodes
+    # (None in the ideal world — every model is available by construction)
+    available: Optional[List[int]] = None
     # ModelEvaluation (or a drop-in replacement like the sharded ME)
     evaluation: Optional[MEResult] = None
     # VoteCollection
@@ -96,7 +120,14 @@ class ConsensusPhase:
 
 
 class CommitReveal(ConsensusPhase):
-    """Alg. 1 line 2 — HCDS at every node (commit, verify, reveal, verify)."""
+    """Alg. 1 line 2 — HCDS at every node (commit, verify, reveal, verify).
+
+    Networked mode: commits and reveals travel the bus (latency, drops,
+    partitions), adversaries may withhold commits or equivocate reveals,
+    and a model only participates in the rest of the round if its reveal
+    was accepted by ≥ quorum nodes (``ctx.available``). Fewer than quorum
+    available models aborts the round (:class:`QuorumNotReached`).
+    """
 
     name = "commit_reveal"
 
@@ -110,6 +141,9 @@ class CommitReveal(ConsensusPhase):
         # digests (BlockMint) both reuse these bytes
         model_bytes = [serialize_pytree(m) for m in ctx.models]
         ctx.extra["model_bytes"] = model_bytes
+        if ctx.env is not None:
+            self._run_networked(ctx, model_bytes)
+            return
         reveal_results = run_hcds_round(self.nodes, ctx.models, ctx.round,
                                         self.public_keys,
                                         model_bytes=model_bytes)
@@ -118,16 +152,76 @@ class CommitReveal(ConsensusPhase):
                 if not res.accepted and sender not in ctx.rejected:
                     ctx.rejected[sender] = res.reason
 
+    def _run_networked(self, ctx: RoundContext,
+                       model_bytes: List[bytes]) -> None:
+        env = ctx.env
+        alive = env.alive()
+        commits = {}
+        for i in sorted(alive):
+            if env.withholds_commit(i):
+                ctx.rejected.setdefault(i, "commit-withheld")
+                env.note("commit_withheld", round=ctx.round, node=i)
+                continue
+            commits[i] = self.nodes[i].commit(ctx.models[i], ctx.round,
+                                              model_bytes=model_bytes[i])
+        for recv, msgs in env.exchange("commit", ctx.round, commits).items():
+            for sender, c in msgs.items():
+                self.nodes[recv].receive_commit(c, self.public_keys[sender])
+        # a node that never committed has nothing to reveal
+        reveals = {i: env.mutate_reveal(i, self.nodes[i].reveal(ctx.round))
+                   for i in commits}
+        accepted = {i: 1 for i in commits}      # every node holds its own
+        for recv, msgs in env.exchange("reveal", ctx.round, reveals).items():
+            for sender, r in msgs.items():
+                res = self.nodes[recv].receive_reveal(
+                    r, self.public_keys[sender])
+                if res.accepted:
+                    accepted[sender] += 1
+                elif (res.reason != "no-commitment"
+                      and sender not in ctx.rejected):
+                    # 'no-commitment' only means this receiver missed the
+                    # sender's commit (a transport gap, not a protocol
+                    # violation) — it must not brand an honest node
+                    ctx.rejected[sender] = res.reason
+        available = [i for i in range(ctx.n_nodes)
+                     if accepted.get(i, 0) >= env.quorum]
+        ctx.available = available
+        for i in range(ctx.n_nodes):
+            if i not in available:
+                ctx.rejected.setdefault(
+                    i, "unavailable" if i in alive else "offline")
+            else:
+                # a model a quorum accepted is in the round, full stop —
+                # scattered per-receiver rejections were delivery noise
+                ctx.rejected.pop(i, None)
+        if len(available) < env.quorum:
+            raise QuorumNotReached(
+                f"round {ctx.round}: only {len(available)} models reached "
+                f"a reveal quorum (need {env.quorum})")
+
 
 class ModelEvaluation(ConsensusPhase):
     """Alg. 1 line 3 — ME at every node. All honest nodes compute identical
-    (gw, sims); computed once here, per-node votes derived in the next phase."""
+    (gw, sims); computed once here, per-node votes derived in the next phase.
+
+    Networked mode: a model whose reveal never reached quorum gets zero
+    weight in Eq. 1 — exactly what Eq. 1 already does for a dataless
+    cluster — so gw(k) is computed over the available set only.
+    """
 
     name = "model_evaluation"
 
     def run(self, ctx: RoundContext) -> None:
+        sizes = list(ctx.data_sizes)
+        if ctx.available is not None:
+            avail = set(ctx.available)
+            sizes = [s if i in avail else 0.0 for i, s in enumerate(sizes)]
+            if sum(sizes) <= 0.0:
+                raise QuorumNotReached(
+                    f"round {ctx.round}: available models carry zero "
+                    f"aggregate data weight")
         ctx.evaluation = model_evaluation_pytrees(
-            list(ctx.models), list(ctx.data_sizes), g_max=ctx.g_max)
+            list(ctx.models), sizes, g_max=ctx.g_max)
 
 
 class VoteCollection(ConsensusPhase):
@@ -145,6 +239,9 @@ class VoteCollection(ConsensusPhase):
             raise RuntimeError("VoteCollection requires a prior ModelEvaluation")
         n = ctx.n_nodes
         sims = np.asarray(ctx.evaluation.similarities)
+        if ctx.env is not None:
+            self._run_networked(ctx, sims)
+            return
         honest_vote = int(np.argmax(sims))
         votes = np.empty(n, np.int64)
         preds = np.empty((n, n), np.float32)
@@ -154,6 +251,40 @@ class VoteCollection(ConsensusPhase):
             preds_i[vote_i] = ctx.g_max
             if ctx.vote_hook is not None:
                 vote_i, preds_i = ctx.vote_hook(i, vote_i, preds_i)
+            votes[i] = vote_i
+            preds[i] = preds_i
+            self.contract.submit(
+                VoteSubmission(i, ctx.round, int(vote_i), preds_i))
+        ctx.votes = votes
+        ctx.predictions = preds
+
+    def _run_networked(self, ctx: RoundContext, sims: np.ndarray) -> None:
+        """Only live, non-withholding nodes vote; honest nodes restrict the
+        argmax to available models; a vote lands on-chain only if its
+        transaction reaches the chain quorum before the tally deadline.
+        ``ctx.votes[i] == -1`` marks an abstention/lost vote."""
+        env = ctx.env
+        n = ctx.n_nodes
+        avail = ctx.available if ctx.available is not None else list(range(n))
+        masked = np.full(n, -np.inf, np.float64)
+        masked[avail] = sims[avail]
+        honest_vote = int(np.argmax(masked))
+        votes = np.full(n, -1, np.int64)
+        preds = np.zeros((n, n), np.float32)
+        voters = [i for i in sorted(env.alive()) if not env.withholds_vote(i)]
+        landed = env.tx_landed("vote", ctx.round, voters)
+        for i in voters:
+            vote_i = honest_vote
+            preds_i = np.full((n,), (1.0 - ctx.g_max) / (n - 1), np.float32)
+            preds_i[vote_i] = ctx.g_max
+            adversarial = env.adversary_vote(i, ctx.round, vote_i, preds_i)
+            if adversarial is not None:
+                vote_i, preds_i = adversarial
+            elif ctx.vote_hook is not None:
+                vote_i, preds_i = ctx.vote_hook(i, vote_i, preds_i)
+            if i not in landed:
+                env.note("vote_lost", round=ctx.round, node=i)
+                continue
             votes[i] = vote_i
             preds[i] = preds_i
             self.contract.submit(
@@ -171,13 +302,33 @@ class Tally(ConsensusPhase):
         self.contract = contract
 
     def run(self, ctx: RoundContext) -> None:
-        ctx.btsv = self.contract.tally(ctx.round)
+        if ctx.env is None:
+            ctx.btsv = self.contract.tally(ctx.round)
+        else:
+            from repro.blockchain.smart_contract import ContractError
+            try:
+                ctx.btsv = self.contract.tally(
+                    ctx.round, min_submissions=ctx.env.quorum)
+            except ContractError as e:
+                # below quorum: drop the partial submissions so a later
+                # retry of this round number starts clean
+                self.contract.drop_round(ctx.round)
+                raise QuorumNotReached(
+                    f"round {ctx.round}: vote quorum not reached "
+                    f"({e})") from e
         ctx.leader = int(ctx.btsv.leader)
 
 
 class BlockMint(ConsensusPhase):
     """Alg. 1 lines 6-7 — the leader mints and signs the block; every node
-    verifies (signature + local BTSV re-tally) and appends to its ledger."""
+    verifies (signature + local BTSV re-tally) and appends to its ledger.
+
+    Networked mode: if the elected leader times out (crashed/lazy), the
+    next candidate down the advote ranking takes over (deterministic
+    re-election, recorded in ``ctx.extra["reelections"]`` and the block's
+    ``extra``); the block travels the bus, so nodes it never reaches fall
+    behind and converge later via the ledger's catch-up sync.
+    """
 
     name = "block_mint"
 
@@ -192,32 +343,13 @@ class BlockMint(ConsensusPhase):
     def run(self, ctx: RoundContext) -> None:
         if ctx.leader is None or ctx.btsv is None or ctx.votes is None:
             raise RuntimeError("BlockMint requires a prior Tally")
+        if ctx.env is not None:
+            self._run_networked(ctx)
+            return
         n = ctx.n_nodes
         leader = ctx.leader
-        # reuse the bytes CommitReveal already serialized (one
-        # serialization per model per round); fall back if the pipeline
-        # was rearranged without a CommitReveal stage
-        model_bytes = ctx.extra.get("model_bytes")
-        if model_bytes is None or len(model_bytes) != len(ctx.models):
-            model_bytes = [serialize_pytree(m) for m in ctx.models]
-        model_digests = {
-            i: crypto.sha256_digest(b).hex()
-            for i, b in enumerate(model_bytes)
-        }
-        gw_digest = crypto.sha256_digest(
-            np.asarray(ctx.global_model, np.float32).tobytes()).hex()
-        block = Block(
-            index=self.ledgers[leader].height,
-            round=ctx.round,
-            leader_id=leader,
-            prev_hash=self.ledgers[leader].head_hash,
-            model_digests=model_digests,
-            global_model_digest=gw_digest,
-            votes={i: int(ctx.votes[i]) for i in range(n)},
-            vote_weights={i: float(ctx.btsv.weights[i]) for i in range(n)},
-            advotes={j: float(ctx.btsv.advotes[j]) for j in range(n)},
-            extra={"rejected": {str(i): r for i, r in ctx.rejected.items()}},
-        ).signed(self.nodes[leader].keypair)
+        block = self._mint(ctx, leader, votes={i: int(ctx.votes[i])
+                                               for i in range(n)})
 
         def retally(b: Block) -> int:
             res = self.contract.result(b.round)
@@ -226,6 +358,109 @@ class BlockMint(ConsensusPhase):
         for ledger in self.ledgers:
             ledger.append(block, leader_pk=self.public_keys[leader],
                           retally=retally)
+        ctx.block = block
+
+    def _mint(self, ctx: RoundContext, leader: int,
+              votes: Dict[int, int]) -> Block:
+        n = ctx.n_nodes
+        # reuse the bytes CommitReveal already serialized (one
+        # serialization per model per round); fall back if the pipeline
+        # was rearranged without a CommitReveal stage
+        model_bytes = ctx.extra.get("model_bytes")
+        if model_bytes is None or len(model_bytes) != len(ctx.models):
+            model_bytes = [serialize_pytree(m) for m in ctx.models]
+        avail = ctx.available if ctx.available is not None else list(range(n))
+        model_digests = {i: crypto.sha256_digest(model_bytes[i]).hex()
+                         for i in avail}
+        gw_digest = crypto.sha256_digest(
+            np.asarray(ctx.global_model, np.float32).tobytes()).hex()
+        extra: Dict[str, Any] = {
+            "rejected": {str(i): r for i, r in ctx.rejected.items()}}
+        if ctx.available is not None:
+            extra["available"] = list(avail)
+        if ctx.extra.get("reelections"):
+            extra["reelections"] = int(ctx.extra["reelections"])
+        return Block(
+            index=self.ledgers[leader].height,
+            round=ctx.round,
+            leader_id=leader,
+            prev_hash=self.ledgers[leader].head_hash,
+            model_digests=model_digests,
+            global_model_digest=gw_digest,
+            votes=votes,
+            vote_weights={i: float(ctx.btsv.weights[i]) for i in range(n)},
+            advotes={j: float(ctx.btsv.advotes[j]) for j in range(n)},
+            extra=extra,
+        ).signed(self.nodes[leader].keypair)
+
+    def _run_networked(self, ctx: RoundContext) -> None:
+        env = ctx.env
+        advotes = np.asarray(ctx.btsv.advotes, np.float64)
+        # stable argsort on the negated tallies: ties break to lower id, so
+        # every node derives the same re-election order from the contract
+        ranking = [int(i) for i in np.argsort(-advotes, kind="stable")]
+        reelections = 0
+        leader = None
+        for cand in ranking:
+            if env.leader_fails(cand, ctx.round, reelections):
+                env.note("leader_timeout", round=ctx.round, candidate=cand,
+                         attempt=reelections)
+                reelections += 1
+                continue
+            leader = cand
+            break
+        if leader is None:
+            raise QuorumNotReached(
+                f"round {ctx.round}: every leader candidate timed out")
+        ctx.leader = leader
+        ctx.extra["reelections"] = reelections
+
+        led = self.ledgers[leader]
+        # a leader that itself missed rounds first catches up with the best
+        # chain it can reach, so it never mints on a stale head
+        for peer in env.reachable_peers(leader):
+            if self.ledgers[peer].height > led.height:
+                led.fork_choice(self.ledgers[peer].blocks, self.public_keys)
+        votes = {i: int(v) for i, v in enumerate(ctx.votes) if v >= 0}
+        block = self._mint(ctx, leader, votes=votes)
+
+        def plausible(b: Block) -> int:
+            """Env-mode analogue of the BTSV re-tally check: the block's
+            leader must sit within the first ``reelections + 1`` entries of
+            the advote ranking every node derives from the shared contract
+            result (candidates before it are the ones that timed out)."""
+            attempts = int(b.extra.get("reelections", 0))
+            allowed = ranking[:attempts + 1]
+            return b.leader_id if b.leader_id in allowed else -1
+
+        led.append(block, leader_pk=self.public_keys[leader],
+                   retally=plausible)
+        deliveries = env.exchange("block", ctx.round, {leader: block})
+        behind: List[int] = []
+        for recv in sorted(env.alive()):
+            if recv == leader:
+                continue
+            got = deliveries.get(recv, {}).get(leader)
+            if got is None:
+                env.note("missed_block", round=ctx.round, node=recv)
+                behind.append(recv)
+                continue
+            rled = self.ledgers[recv]
+            if rled.head_hash != block.prev_hash:
+                # the receiver missed earlier blocks: catch-up sync from
+                # the leader's chain (reachable — its block just arrived),
+                # falling back to fork choice on diverged history
+                try:
+                    rled.sync_from(led.blocks[:-1], self.public_keys)
+                except InvalidBlock:
+                    rled.fork_choice(led.blocks, self.public_keys)
+            if rled.head_hash == block.prev_hash:
+                rled.append(block, leader_pk=self.public_keys[leader],
+                            retally=plausible)
+            elif rled.head_hash != led.head_hash:
+                env.note("append_failed", round=ctx.round, node=recv)
+                behind.append(recv)
+        ctx.extra["behind"] = behind
         ctx.block = block
 
 

@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.core.btsv import BTSVConfig
 from repro.core.consensus import ConsensusRecord, PoFELConsensus
+from repro.core.phases import QuorumNotReached
 from repro.core.serialization import flatten_pytree, unflatten_pytree_device
 from repro.fl.adapters import MLPAdapter, ModelAdapter
 from repro.fl.fedavg import fedavg
@@ -75,11 +76,11 @@ class BHFLConfig:
 @dataclass
 class RoundMetrics:
     round: int
-    leader_id: int
+    leader_id: int              # -1 when the round aborted (quorum timeout)
     test_accuracy: float
     test_loss: float
     mean_similarity: float
-    consensus: ConsensusRecord
+    consensus: Optional[ConsensusRecord]   # None for an aborted round
 
 
 class AllNodesPlagiarizeError(RuntimeError):
@@ -113,6 +114,9 @@ class BHFLRuntime:
         # vote hooks handled at consensus time)
         self.plagiarists: set[int] = set()
         self.vote_hook: Optional[Callable] = None
+        # fault environment (repro.sim.network.SimEnv) — set by the
+        # scenario wiring in api.run_bhfl; None = ideal synchronous world
+        self.env: Optional[Any] = None
         # -- FEL engine selection -------------------------------------------
         self._engine = None
         self._global_flat: Optional[jax.Array] = None
@@ -192,29 +196,50 @@ class BHFLRuntime:
         return params
 
     # -- W(k) production, per engine ----------------------------------------
-    def _fel_models_reference(self, round_seed: int) -> List[Any]:
+    def _fel_models_reference(self, round_seed: int,
+                              down: Optional[set] = None) -> List[Any]:
+        down = down or set()
         models: List[Any] = []
         for cluster in self.clusters:
-            if cluster.node_id in self.plagiarists:
+            if cluster.node_id in down:
+                # a crashed node trains nothing; the stale global model
+                # stands in (it is never revealed, so it cannot be voted)
+                models.append(self.global_params)
+            elif cluster.node_id in self.plagiarists:
                 models.append(None)  # filled in below by copying a victim
             else:
                 models.append(self._run_fel(cluster, self.global_params,
                                             round_seed=round_seed))
         # plagiarists copy the first honest model they "received"
-        honest_ids = [i for i, m in enumerate(models) if m is not None]
+        honest_ids = [i for i, m in enumerate(models)
+                      if m is not None and i not in down]
+        if any(m is None for m in models) and not honest_ids:
+            raise QuorumNotReached(
+                "every honest node is down — no model for the "
+                "plagiarist(s) to copy; round cannot proceed")
         for i, m in enumerate(models):
             if m is None:
                 victim = honest_ids[0]
                 models[i] = jax.tree.map(lambda x: x, models[victim])
         return models
 
-    def _fel_models_batched(self, round_seed: int) -> List[Any]:
+    def _fel_models_batched(self, round_seed: int,
+                            down: Optional[set] = None) -> List[Any]:
         """One jitted program → stacked (N, D) W(k); rows feed consensus
-        directly (a flat vector is itself a valid model pytree)."""
+        directly (a flat vector is itself a valid model pytree). Crashed
+        nodes keep the stale global model, matching the reference path."""
+        down = down or set()
         W = self._engine.run_round(self._global_flat, round_seed)
         flags = [c.node_id in self.plagiarists for c in self.clusters]
-        victim = flags.index(False)   # first honest, as in the reference path
-        return [W[victim] if f else W[i] for i, f in enumerate(flags)]
+        # first honest *live* node, as in the reference path
+        victim = next((i for i, f in enumerate(flags)
+                       if not f and i not in down), None)
+        if victim is None and any(flags):
+            raise QuorumNotReached(
+                "every honest node is down — no model for the "
+                "plagiarist(s) to copy; round cannot proceed")
+        return [self._global_flat if i in down else
+                (W[victim] if f else W[i]) for i, f in enumerate(flags)]
 
     # -- one BCFL round ------------------------------------------------------
     def run_round(self) -> RoundMetrics:
@@ -225,14 +250,32 @@ class BHFLRuntime:
             raise AllNodesPlagiarizeError(
                 f"all {cfg.n_nodes} nodes are plagiarists — at least one "
                 f"honest node must train a model for round {k}")
+        env = self.env
+        down: set = set()
+        if env is not None:
+            env.begin_round(k)
+            down = set(range(cfg.n_nodes)) - env.alive()
         round_seed = cfg.seed + k + 1
-        if self._engine is not None:
-            models = self._fel_models_batched(round_seed)
-        else:
-            models = self._fel_models_reference(round_seed)
-
         sizes = [float(c.data_size) for c in self.clusters]
-        record = self.consensus.run_round(models, sizes, vote_hook=self.vote_hook)
+        try:
+            if self._engine is not None:
+                models = self._fel_models_batched(round_seed, down=down)
+            else:
+                models = self._fel_models_reference(round_seed, down=down)
+            record = self.consensus.run_round(models, sizes,
+                                              vote_hook=self.vote_hook,
+                                              env=env)
+        except QuorumNotReached as e:
+            if env is None:     # impossible without fault injection
+                raise
+            # liveness gap: no block this round; global model unchanged
+            self.consensus.skip_round()
+            env.note("round_aborted", round=k, reason=str(e))
+            metrics = RoundMetrics(k, -1, float("nan"), float("nan"),
+                                   float("nan"), None)
+            self.history.append(metrics)
+            env.end_round(k, metrics, aborted=True)
+            return metrics
 
         # adopt gw(k) as the next global model
         if self._engine is not None:
@@ -252,6 +295,8 @@ class BHFLRuntime:
         metrics = RoundMetrics(k, record.leader_id, acc, loss,
                                float(np.mean(record.similarities)), record)
         self.history.append(metrics)
+        if env is not None:
+            env.end_round(k, metrics, aborted=False)
         return metrics
 
     def run(self, n_rounds: int) -> List[RoundMetrics]:
@@ -261,5 +306,6 @@ class BHFLRuntime:
     def leader_counts(self) -> Dict[int, int]:
         counts: Dict[int, int] = {i: 0 for i in range(self.cfg.n_nodes)}
         for m in self.history:
-            counts[m.leader_id] += 1
+            if m.leader_id >= 0:    # aborted rounds elected no leader
+                counts[m.leader_id] += 1
         return counts

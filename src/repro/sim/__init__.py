@@ -1,0 +1,38 @@
+"""``repro.sim`` — event-driven BHFL network simulator with adversary and
+fault scenarios.
+
+The paper's security claims (HCDS stops plagiarism, BTSV defeats bribery,
+the permissioned chain removes the single point of failure) are exercised
+here under non-ideal conditions: a deterministic seeded message bus
+(latency, drops, partitions, churn — :mod:`repro.sim.network`), a library
+of Byzantine behaviours (:mod:`repro.sim.adversary`), and a registry of
+named scenarios (:mod:`repro.sim.scenarios`), each producing a typed
+:class:`~repro.sim.report.ScenarioReport` of liveness, safety violations,
+honest-leader rate, and recovery time.
+
+    from repro import sim
+    report = sim.run_scenario("byzantine_third", seed=0)
+    report.liveness, report.safety_violations, report.honest_leader_rate
+
+or through the facade — ``api.run_bhfl(scenario="byzantine_third")``.
+"""
+
+from repro.sim.adversary import (Adversary, BriberyVoter, CommitWithholder,
+                                 LazyLeader, LeaderCrash, Plagiarist,
+                                 RevealEquivocator)
+from repro.sim.network import (ChurnSpec, LinkSpec, NetworkConfig,
+                               PartitionSpec, SimEnv, SimNetwork)
+from repro.sim.report import RoundReport, ScenarioReport
+from repro.sim.runner import build_env, run_scenario
+from repro.sim.scenarios import (SCENARIOS, Scenario, get_scenario,
+                                 list_scenarios, register)
+
+__all__ = [
+    "run_scenario", "build_env",
+    "Scenario", "SCENARIOS", "get_scenario", "list_scenarios", "register",
+    "ScenarioReport", "RoundReport",
+    "SimNetwork", "SimEnv", "NetworkConfig", "LinkSpec", "PartitionSpec",
+    "ChurnSpec",
+    "Adversary", "Plagiarist", "BriberyVoter", "CommitWithholder",
+    "RevealEquivocator", "LazyLeader", "LeaderCrash",
+]

@@ -1,0 +1,7 @@
+"""``python -m repro.sim`` — the scenario-runner CLI (see sim.runner)."""
+
+import sys
+
+from repro.sim.runner import main
+
+sys.exit(main())

@@ -1,0 +1,151 @@
+"""Adversary library for the BHFL network simulator (paper §3.2, §7.4).
+
+Each adversary attaches Byzantine behaviour to one node (``node_id``) or
+to a protocol role (``node_id=None`` — e.g. :class:`LeaderCrash` crashes
+*whoever* wins the election). ``SimEnv`` consults them at the protocol
+step they subvert:
+
+=====================  ====================================================
+:class:`Plagiarist`     copies a peer's FEL model; HCDS rejects the
+                        duplicate reveal (§3.2 — the HCDS claim)
+:class:`BriberyVoter`   votes a fixed target (TA) or uniformly at random
+                        (RA); BTSV down-weights it (§7.4 — the BTSV claim)
+:class:`CommitWithholder`  never broadcasts its commitment, so its model
+                        misses the reveal quorum and drops out of ME
+:class:`RevealEquivocator` commits to one model, reveals another; every
+                        honest receiver sees the digest mismatch
+:class:`LazyLeader`     participates normally but never mints when
+                        elected, forcing a re-election
+:class:`LeaderCrash`    role adversary: the elected leader times out in
+                        the configured rounds, whoever it is
+=====================  ====================================================
+
+Adversaries are stateless across runs — any randomness flows through the
+seeded generator the environment passes in, keeping scenarios replayable.
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+
+class Adversary:
+    """Base: honest behaviour at every step. Subclasses override the step
+    they attack; everything else stays protocol-compliant so the attack is
+    isolated (one deviation per adversary class)."""
+
+    plagiarizes: bool = False
+
+    def __init__(self, node_id: Optional[int] = None):
+        self.node_id = node_id
+
+    def withholds_commit(self, round: int) -> bool:
+        return False
+
+    def withholds_vote(self, round: int) -> bool:
+        return False
+
+    def mutate_reveal(self, round: int, reveal: Any) -> Any:
+        return reveal
+
+    def vote(self, round: int, n: int, honest_vote: int, preds: np.ndarray,
+             rng: np.random.Generator
+             ) -> Optional[Tuple[int, np.ndarray]]:
+        """Return (vote, predictions) to deviate, or None to vote honestly."""
+        return None
+
+    def extra_delay(self, kind: str, round: int) -> float:
+        """Additional bus delay for this node's ``kind`` broadcasts (ms)."""
+        return 0.0
+
+    def fails_as_leader(self, round: int, node: int, attempt: int) -> bool:
+        return False
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"<{type(self).__name__} node={self.node_id}>"
+
+
+class Plagiarist(Adversary):
+    """Copies the first honest node's FEL model instead of training
+    (wired by the runtime's ``plagiarists`` set). Its reveal necessarily
+    trails the victim's broadcast — it can only re-serve bytes it has
+    observed — so honest receivers always hold the victim's reveal first
+    and reject the copy as ``plagiarized-model``."""
+
+    plagiarizes = True
+
+    def __init__(self, node_id: int, reveal_lag: float = 30.0):
+        super().__init__(node_id)
+        self.reveal_lag = reveal_lag
+
+    def extra_delay(self, kind: str, round: int) -> float:
+        return self.reveal_lag if kind == "reveal" else 0.0
+
+
+class BriberyVoter(Adversary):
+    """§7.4 bribery attacks: ``mode='targeted'`` always votes ``target``
+    (TA); ``mode='random'`` votes uniformly at random (RA). Predictions
+    claim g_max certainty for the bribed vote, like an honest voter would."""
+
+    def __init__(self, node_id: int, mode: str = "targeted", target: int = 0,
+                 g_max: float = 0.99):
+        if mode not in ("targeted", "random"):
+            raise ValueError(f"mode must be 'targeted' or 'random', "
+                             f"got {mode!r}")
+        super().__init__(node_id)
+        self.mode = mode
+        self.target = target
+        self.g_max = g_max
+
+    def vote(self, round: int, n: int, honest_vote: int, preds: np.ndarray,
+             rng: np.random.Generator) -> Tuple[int, np.ndarray]:
+        vote = self.target if self.mode == "targeted" \
+            else int(rng.integers(0, n))
+        p = np.full(n, (1.0 - self.g_max) / (n - 1), np.float32)
+        p[vote] = self.g_max
+        return vote, p
+
+
+class CommitWithholder(Adversary):
+    """Silent in the commit stage: no commitment, hence nothing to reveal,
+    hence its model never reaches the availability quorum."""
+
+    def withholds_commit(self, round: int) -> bool:
+        return True
+
+
+class RevealEquivocator(Adversary):
+    """Commits to its trained model, then reveals different bytes. Every
+    honest receiver recomputes H(r‖w), sees the mismatch with the
+    committed digest, and rejects (``digest-mismatch``)."""
+
+    def mutate_reveal(self, round: int, reveal: Any) -> Any:
+        forged = bytes(reveal.model_bytes[:-1]) + bytes(
+            [reveal.model_bytes[-1] ^ 0x01])
+        return replace(reveal, model_bytes=forged)
+
+
+class LazyLeader(Adversary):
+    """Fully protocol-compliant until elected — then it never broadcasts
+    the block, and the network re-elects the next candidate."""
+
+    def fails_as_leader(self, round: int, node: int, attempt: int) -> bool:
+        return node == self.node_id
+
+
+class LeaderCrash(Adversary):
+    """Role adversary (``node_id=None``): in each round of ``rounds``, the
+    first ``times`` elected candidates crash at mint time — deterministic
+    exercise of BlockMint's re-election path regardless of which node the
+    tally actually elects."""
+
+    def __init__(self, rounds: Tuple[int, ...], times: int = 1):
+        super().__init__(None)
+        self.rounds = tuple(rounds)
+        self.times = times
+
+    def fails_as_leader(self, round: int, node: int, attempt: int) -> bool:
+        return round in self.rounds and attempt < self.times

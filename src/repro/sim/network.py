@@ -1,0 +1,340 @@
+"""Deterministic discrete-event message bus for BHFL consensus rounds.
+
+The paper evaluates PoFEL in an ideal world — every node present,
+synchronous, lossless. This module supplies the non-ideal one: a seeded
+discrete-event network (per-link latency distributions, drop rates,
+partitions, node churn) plus :class:`SimEnv`, the object the consensus
+phases consult when running in networked mode (``RoundContext.env``).
+
+Everything is driven by one ``numpy`` Generator seeded at construction,
+so a scenario replays bit-identically for a given seed: same latencies,
+same drops, same adversarial random votes, same report.
+
+Time is simulated (milliseconds of virtual time, no wall-clock): each
+protocol phase (commit / reveal / vote / block) broadcasts its messages
+onto a priority queue and then advances the clock to the phase deadline;
+messages scheduled past the deadline are timeouts, indistinguishable
+from drops to the receiver — which is exactly the point.
+"""
+
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Mapping, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+DEFAULT_TIMEOUTS: Mapping[str, float] = {
+    "commit": 60.0, "reveal": 60.0, "vote": 60.0, "block": 90.0}
+
+
+@dataclass(frozen=True)
+class LinkSpec:
+    """Per-link delivery model: latency = base + Exp(jitter), iid per
+    message; ``drop_rate`` is the independent per-message loss probability."""
+
+    base_latency: float = 5.0     # ms
+    jitter: float = 2.0           # exponential jitter scale (ms)
+    drop_rate: float = 0.0
+
+
+@dataclass(frozen=True)
+class PartitionSpec:
+    """Network split into ``groups`` for rounds [start_round, end_round):
+    messages cross group boundaries only after the partition heals."""
+
+    groups: Tuple[Tuple[int, ...], ...]
+    start_round: int
+    end_round: int
+
+
+@dataclass(frozen=True)
+class ChurnSpec:
+    """Node ``node`` is down (crashed) for rounds [down_from, down_until):
+    it neither sends nor receives, and skips FEL training entirely."""
+
+    node: int
+    down_from: int
+    down_until: int = 1 << 30
+
+
+@dataclass(frozen=True)
+class NetworkConfig:
+    link: LinkSpec = LinkSpec()
+    partitions: Tuple[PartitionSpec, ...] = ()
+    churn: Tuple[ChurnSpec, ...] = ()
+    timeouts: Mapping[str, float] = field(
+        default_factory=lambda: dict(DEFAULT_TIMEOUTS))
+
+
+class SimNetwork:
+    """The bus. One instance simulates all N×N links of a BHFL deployment."""
+
+    def __init__(self, n_nodes: int, config: Optional[NetworkConfig] = None,
+                 seed: int = 0):
+        self.n_nodes = n_nodes
+        self.config = config or NetworkConfig()
+        self.rng = np.random.default_rng(seed)
+        self.now = 0.0
+        self.round = 0
+        self._seq = 0                 # heapq tie-break
+        self.stats: Dict[str, Dict[str, int]] = {}
+        for spec in self.config.churn:
+            if not (0 <= spec.node < n_nodes):
+                raise ValueError(f"churn names unknown node {spec.node}")
+        for spec in self.config.partitions:
+            named = [i for g in spec.groups for i in g]
+            if sorted(named) != list(range(n_nodes)):
+                raise ValueError(
+                    f"partition groups {spec.groups} must cover every node "
+                    f"of 0..{n_nodes - 1} exactly once")
+
+    # -- topology state ------------------------------------------------------
+    def set_round(self, k: int) -> None:
+        self.round = k
+
+    def alive(self) -> Set[int]:
+        down = {c.node for c in self.config.churn
+                if c.down_from <= self.round < c.down_until}
+        return set(range(self.n_nodes)) - down
+
+    def group_of(self, i: int) -> int:
+        """Partition group index of node i this round (0 = no partition)."""
+        for spec in self.config.partitions:
+            if spec.start_round <= self.round < spec.end_round:
+                for g, members in enumerate(spec.groups):
+                    if i in members:
+                        return g
+        return 0
+
+    def reachable(self, i: int, j: int) -> bool:
+        alive = self.alive()
+        return (i in alive and j in alive
+                and self.group_of(i) == self.group_of(j))
+
+    def components(self) -> List[Set[int]]:
+        """Connected components among live nodes this round."""
+        groups: Dict[int, Set[int]] = {}
+        for i in self.alive():
+            groups.setdefault(self.group_of(i), set()).add(i)
+        return list(groups.values())
+
+    # -- phase exchange ------------------------------------------------------
+    def exchange(self, kind: str, payloads: Mapping[int, Any],
+                 extra_delays: Optional[Mapping[int, float]] = None,
+                 ) -> Dict[int, Dict[int, Any]]:
+        """Broadcast each sender's payload to every other live node, then
+        advance the clock to the phase deadline. Returns
+        ``{receiver: {sender: payload}}`` for messages that were reachable,
+        not dropped, and arrived before the deadline — in arrival order,
+        which is the order receivers process them."""
+        link = self.config.link
+        deadline = self.now + self.config.timeouts.get(kind, 60.0)
+        stat = self.stats.setdefault(
+            kind, {"sent": 0, "delivered": 0, "dropped": 0, "timed_out": 0})
+        queue: List[Tuple[float, int, int, int, Any]] = []
+        for sender in sorted(payloads):
+            delay = (extra_delays or {}).get(sender, 0.0)
+            for recv in sorted(self.alive()):
+                if recv == sender:
+                    continue
+                stat["sent"] += 1
+                if not self.reachable(sender, recv):
+                    stat["dropped"] += 1
+                    continue
+                if link.drop_rate > 0 and self.rng.random() < link.drop_rate:
+                    stat["dropped"] += 1
+                    continue
+                at = (self.now + link.base_latency + delay
+                      + float(self.rng.exponential(link.jitter)))
+                self._seq += 1
+                heapq.heappush(queue,
+                               (at, self._seq, sender, recv, payloads[sender]))
+        deliveries: Dict[int, Dict[int, Any]] = {}
+        while queue:
+            at, _, sender, recv, payload = heapq.heappop(queue)
+            if at > deadline:
+                stat["timed_out"] += 1
+                continue
+            stat["delivered"] += 1
+            deliveries.setdefault(recv, {})[sender] = payload
+        self.now = deadline
+        return deliveries
+
+    def tx_landed(self, kind: str, senders: Iterable[int],
+                  quorum: int) -> Set[int]:
+        """Which senders' on-chain transactions landed before the tally
+        deadline. The permissioned chain lives wherever a quorum of live
+        nodes can talk to each other, so a transaction lands iff its sender
+        sits in (or can reach) a component of ≥ quorum nodes and the
+        submission itself isn't dropped."""
+        quorate = [c for c in self.components() if len(c) >= quorum]
+        chain_nodes: Set[int] = set().union(*quorate) if quorate else set()
+        drop = self.config.link.drop_rate
+        landed = set()
+        for i in sorted(set(senders)):
+            if i not in chain_nodes:
+                continue
+            if drop > 0 and self.rng.random() < drop:
+                continue
+            landed.add(i)
+        self.now += self.config.timeouts.get(kind, 60.0)
+        return landed
+
+
+class SimEnv:
+    """The fault environment the consensus phases consult (duck-typed from
+    ``repro.core.phases``): the bus, the adversaries, the quorum, and the
+    per-round observations that become the :class:`ScenarioReport`.
+
+    Call order per round: :meth:`begin_round` → phases use the query /
+    exchange methods → :meth:`end_round`; :meth:`finalize` heals the
+    network, runs a last catch-up sync, and builds the report.
+    """
+
+    def __init__(self, network: SimNetwork,
+                 adversaries: Sequence[Any] = (),
+                 quorum: Optional[int] = None, seed: int = 0):
+        self.network = network
+        n = network.n_nodes
+        self.quorum = quorum if quorum is not None else math.ceil(2 * n / 3)
+        self.rng = np.random.default_rng(seed + 0x5EED)
+        self._by_node: Dict[int, Any] = {}
+        self._role: List[Any] = []      # role adversaries (e.g. LeaderCrash)
+        for adv in adversaries:
+            if getattr(adv, "node_id", None) is None:
+                self._role.append(adv)
+            else:
+                if not (0 <= adv.node_id < n):
+                    raise ValueError(
+                        f"adversary {type(adv).__name__} names unknown node "
+                        f"{adv.node_id} (n_nodes={n})")
+                self._by_node[adv.node_id] = adv
+        self.events: List[Dict[str, Any]] = []
+        self.round_logs: List[Dict[str, Any]] = []
+        # every block hash any honest node held at each height, accumulated
+        # at round boundaries BEFORE sync/fork-choice can overwrite a
+        # diverged chain — the evidence base for the safety-violation count
+        self.height_hashes: Dict[int, set] = {}
+        self._consensus = None
+
+    # -- wiring --------------------------------------------------------------
+    def bind(self, consensus: Any) -> None:
+        """Attach the consensus driver whose ledgers/keys this env observes."""
+        self._consensus = consensus
+
+    @property
+    def adversary_ids(self) -> Set[int]:
+        return set(self._by_node)
+
+    def honest_ids(self) -> List[int]:
+        return [i for i in range(self.network.n_nodes)
+                if i not in self._by_node]
+
+    def plagiarist_ids(self) -> Set[int]:
+        return {i for i, a in self._by_node.items()
+                if getattr(a, "plagiarizes", False)}
+
+    # -- phase-facing protocol ----------------------------------------------
+    def alive(self) -> Set[int]:
+        return self.network.alive()
+
+    def reachable_peers(self, i: int) -> List[int]:
+        return [j for j in sorted(self.alive())
+                if j != i and self.network.reachable(i, j)]
+
+    def withholds_commit(self, i: int) -> bool:
+        adv = self._by_node.get(i)
+        return adv is not None and adv.withholds_commit(self.network.round)
+
+    def withholds_vote(self, i: int) -> bool:
+        adv = self._by_node.get(i)
+        return adv is not None and adv.withholds_vote(self.network.round)
+
+    def mutate_reveal(self, i: int, reveal: Any) -> Any:
+        adv = self._by_node.get(i)
+        return reveal if adv is None else adv.mutate_reveal(
+            self.network.round, reveal)
+
+    def adversary_vote(self, i: int, round: int, honest_vote: int,
+                       preds: np.ndarray):
+        adv = self._by_node.get(i)
+        if adv is None:
+            return None
+        return adv.vote(round, self.network.n_nodes, honest_vote, preds,
+                        self.rng)
+
+    def leader_fails(self, candidate: int, round: int, attempt: int) -> bool:
+        if candidate not in self.alive():
+            return True
+        adv = self._by_node.get(candidate)
+        if adv is not None and adv.fails_as_leader(round, candidate, attempt):
+            return True
+        return any(r.fails_as_leader(round, candidate, attempt)
+                   for r in self._role)
+
+    def exchange(self, kind: str, round: int,
+                 payloads: Mapping[int, Any]) -> Dict[int, Dict[int, Any]]:
+        delays = {}
+        for i in payloads:
+            adv = self._by_node.get(i)
+            if adv is not None:
+                d = adv.extra_delay(kind, round)
+                if d:
+                    delays[i] = d
+        return self.network.exchange(kind, payloads, extra_delays=delays)
+
+    def tx_landed(self, kind: str, round: int,
+                  senders: Iterable[int]) -> Set[int]:
+        return self.network.tx_landed(kind, senders, self.quorum)
+
+    def note(self, event: str, **data: Any) -> None:
+        self.events.append({"event": event, **data})
+
+    # -- round bookkeeping ---------------------------------------------------
+    def begin_round(self, k: int) -> None:
+        self.network.set_round(k)
+
+    def end_round(self, k: int, metrics: Any, aborted: bool) -> None:
+        from repro.sim.report import snapshot_round
+        self.round_logs.append(
+            snapshot_round(self, k, metrics, aborted))
+
+    def finalize(self, scenario: str, seed: int,
+                 rounds_requested: int) -> Any:
+        """Heal every fault, run the final catch-up sync among honest
+        nodes, and assemble the :class:`~repro.sim.report.ScenarioReport`."""
+        from repro.sim.report import build_report
+        # heal: advance past every partition/churn window
+        last_fault = max(
+            [s.end_round for s in self.network.config.partitions]
+            + [c.down_until for c in self.network.config.churn
+               if c.down_until < (1 << 30)] + [0])
+        self.network.set_round(max(self.network.round + 1, last_fault))
+        self._final_sync()
+        return build_report(self, scenario, seed, rounds_requested)
+
+    def _final_sync(self) -> None:
+        if self._consensus is None:
+            return
+        ledgers = self._consensus.ledgers
+        pks = self._consensus.public_keys
+        # only nodes still up after the heal can fetch blocks; a
+        # permanently-crashed node keeps its stale chain (the report must
+        # not claim a convergence the dead node never achieved)
+        alive = self.network.alive()
+        honest = [ledgers[i] for i in self.honest_ids() if i in alive]
+        if not honest:
+            return
+        # longest chain wins; equal heights tie-break to the smaller head
+        # hash — the same deterministic rule as Ledger.fork_choice
+        best = sorted(honest, key=lambda l: (-l.height, l.head_hash))[0]
+        for led in honest:
+            if led is best or led.head_hash == best.head_hash:
+                continue
+            try:
+                led.sync_from(best.blocks, pks)
+            except Exception:
+                led.fork_choice(best.blocks, pks)

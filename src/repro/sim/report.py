@@ -1,0 +1,181 @@
+"""Typed scenario reports: what a fault-injection run actually proves.
+
+A :class:`ScenarioReport` condenses a simulated BHFL run into the claims
+the paper makes in §3.2/§7.4 — liveness (every round minted a block),
+safety (no two honest nodes ever held conflicting blocks at the same
+height), honest leadership under attack, and how long honest ledgers
+stayed diverged before catch-up sync reconverged them.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.blockchain.block import block_hash
+
+
+@dataclass
+class RoundReport:
+    """One consensus round as observed by the simulator."""
+
+    round: int
+    leader: int                       # -1 when the round aborted
+    aborted: bool
+    reelections: int
+    honest_leader: Optional[bool]     # None when aborted
+    # did the elected leader match the honest similarity argmax? (the §7.4
+    # bribery-defeat claim; False is legitimate after a re-election)
+    leader_is_argmax: Optional[bool]
+    available: Optional[List[int]]    # models that reached reveal quorum
+    rejected: Dict[int, str]
+    heights: Dict[int, int]           # honest node -> chain height
+    heads: Dict[int, str]             # honest node -> head hash
+    diverged: bool                    # honest ledgers disagree at round end
+    test_accuracy: float
+    test_loss: float
+
+
+@dataclass
+class ScenarioReport:
+    """The scenario-level verdict (one JSON object per run in CI)."""
+
+    scenario: str
+    seed: int
+    n_nodes: int
+    quorum: int
+    adversary_ids: List[int]
+    rounds_requested: int
+    completed_rounds: int
+    aborted_rounds: int
+    liveness: bool                    # every requested round minted a block
+    safety_violations: int            # conflicting honest blocks per height
+    honest_leader_rate: float         # completed rounds led by honest nodes
+    argmax_leader_rate: float         # leaders matching the honest ME argmax
+    reelections: int                  # leader timeouts recovered from
+    rounds_to_recover: int            # rounds honest ledgers spent diverged
+    converged: bool                   # all honest chains identical at end
+    final_heights: Dict[int, int]
+    final_heads: Dict[int, str]
+    rounds: List[RoundReport] = field(default_factory=list)
+    events: List[Dict[str, Any]] = field(default_factory=list)
+    net_stats: Dict[str, Dict[str, int]] = field(default_factory=dict)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, default=str)
+
+    def summary(self) -> str:
+        return (f"{self.scenario}: {self.completed_rounds}/"
+                f"{self.rounds_requested} rounds, "
+                f"liveness={'ok' if self.liveness else 'VIOLATED'}, "
+                f"safety_violations={self.safety_violations}, "
+                f"honest_leader_rate={self.honest_leader_rate:.2f}, "
+                f"reelections={self.reelections}, "
+                f"rounds_to_recover={self.rounds_to_recover}, "
+                f"converged={self.converged}")
+
+
+def _honest_ledger_state(env) -> Dict[int, Any]:
+    ledgers = env._consensus.ledgers if env._consensus is not None else []
+    return {led.node_id: led for led in ledgers
+            if led.node_id in set(env.honest_ids())}
+
+
+def snapshot_round(env, k: int, metrics: Any, aborted: bool) -> RoundReport:
+    """Freeze one round's observable state (called from SimEnv.end_round)."""
+    honest = _honest_ledger_state(env)
+    # record what every honest node holds NOW, before a later round's
+    # fork-choice or the final catch-up sync can rewrite a diverged chain
+    # — safety violations are judged against this accumulated evidence
+    for led in honest.values():
+        for h, b in enumerate(led.blocks):
+            env.height_hashes.setdefault(h, set()).add(block_hash(b))
+    heights = {i: led.height for i, led in honest.items()}
+    heads = {i: led.head_hash for i, led in honest.items()}
+    diverged = len({(heights[i], heads[i]) for i in honest}) > 1
+    record = getattr(metrics, "consensus", None)
+    reelections, available, rejected, is_argmax = 0, None, {}, None
+    if record is not None and record.block is not None:
+        reelections = int(record.block.extra.get("reelections", 0))
+        available = record.block.extra.get("available")
+        rejected = dict(record.rejected)
+        sims = np.asarray(record.similarities, np.float64)
+        masked = np.full_like(sims, -np.inf)
+        avail = available if available is not None else range(len(sims))
+        masked[list(avail)] = sims[list(avail)]
+        is_argmax = bool(int(np.argmax(masked)) == record.leader_id)
+    leader = int(getattr(metrics, "leader_id", -1))
+    return RoundReport(
+        round=k,
+        leader=leader,
+        aborted=aborted,
+        reelections=reelections,
+        honest_leader=None if aborted else leader not in env.adversary_ids,
+        leader_is_argmax=is_argmax,
+        available=available,
+        rejected=rejected,
+        heights=heights,
+        heads=heads,
+        diverged=diverged,
+        test_accuracy=float(getattr(metrics, "test_accuracy", float("nan"))),
+        test_loss=float(getattr(metrics, "test_loss", float("nan"))),
+    )
+
+
+def count_safety_violations(env) -> int:
+    """Heights at which two honest nodes ever committed conflicting blocks.
+
+    This is the §3.2 safety claim, checked rather than assumed. The
+    per-round snapshots accumulated every block hash honest nodes held at
+    each height *before* fork-choice or the final sync could overwrite a
+    diverged chain; the final ledgers are folded in as one last snapshot.
+    A height with more than one distinct hash in that history is a
+    violation even if the chains have since reconverged."""
+    history = {h: set(s) for h, s in env.height_hashes.items()}
+    for led in _honest_ledger_state(env).values():
+        for h, b in enumerate(led.blocks):
+            history.setdefault(h, set()).add(block_hash(b))
+    return sum(1 for s in history.values() if len(s) > 1)
+
+
+def build_report(env, scenario: str, seed: int,
+                 rounds_requested: int) -> ScenarioReport:
+    """Assemble the scenario verdict after the final catch-up sync."""
+    logs = list(env.round_logs)
+    completed = [r for r in logs if not r.aborted]
+    honest = _honest_ledger_state(env)
+    final_heights = {i: led.height for i, led in honest.items()}
+    final_heads = {i: led.head_hash for i, led in honest.items()}
+    converged = len({(final_heights[i], final_heads[i])
+                     for i in honest}) <= 1
+    honest_led = [r for r in completed if r.honest_leader]
+    return ScenarioReport(
+        scenario=scenario,
+        seed=seed,
+        n_nodes=env.network.n_nodes,
+        quorum=env.quorum,
+        adversary_ids=sorted(env.adversary_ids),
+        rounds_requested=rounds_requested,
+        completed_rounds=len(completed),
+        aborted_rounds=len(logs) - len(completed),
+        liveness=(len(completed) == rounds_requested),
+        safety_violations=count_safety_violations(env),
+        honest_leader_rate=(len(honest_led) / len(completed)
+                            if completed else 0.0),
+        argmax_leader_rate=(sum(1 for r in completed if r.leader_is_argmax)
+                            / len(completed) if completed else 0.0),
+        reelections=sum(r.reelections for r in logs),
+        rounds_to_recover=sum(1 for r in logs if r.diverged),
+        converged=converged,
+        final_heights=final_heights,
+        final_heads=final_heads,
+        rounds=logs,
+        events=list(env.events),
+        net_stats={k: dict(v) for k, v in env.network.stats.items()},
+    )

@@ -1,0 +1,179 @@
+"""Named fault/adversary scenarios for the BHFL simulator.
+
+Each :class:`Scenario` bundles a network condition (latency, loss,
+partitions, churn), an adversary cast, and the run sizing; resolve one by
+name with :func:`get_scenario` and run it via
+``api.run_bhfl(scenario="byzantine_third")`` or
+``repro.sim.run_scenario("byzantine_third")``. Register additional
+scenarios with :func:`register` — experiments are encouraged to define
+their own rather than hand-wiring ``SimEnv`` objects.
+
+All scenarios are sized for CPU CI (tiny synthetic MNIST, one FEL
+iteration) — the point is protocol behaviour under faults, not learning
+curves.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+from repro.sim.adversary import (Adversary, BriberyVoter, CommitWithholder,
+                                 LazyLeader, LeaderCrash, Plagiarist,
+                                 RevealEquivocator)
+from repro.sim.network import (ChurnSpec, LinkSpec, NetworkConfig,
+                               PartitionSpec)
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """A named, reproducible fault configuration for one BHFL run."""
+
+    name: str
+    description: str
+    rounds: int = 6
+    n_nodes: int = 6
+    clients_per_node: int = 2
+    fel_iterations: int = 1
+    net: NetworkConfig = field(default_factory=NetworkConfig)
+    adversaries: Tuple[Adversary, ...] = ()
+    quorum: int = 0              # 0 = default ceil(2N/3)
+    n_train: int = 512           # synthetic data sizing (speed, not accuracy)
+    n_test: int = 128
+    slow: bool = False           # excluded from the CI scenario-smoke job
+
+
+SCENARIOS: Dict[str, Scenario] = {}
+
+
+def register(scenario: Scenario) -> Scenario:
+    if scenario.name in SCENARIOS:
+        raise ValueError(f"scenario {scenario.name!r} already registered")
+    SCENARIOS[scenario.name] = scenario
+    return scenario
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; available: "
+                       f"{', '.join(sorted(SCENARIOS))}") from None
+
+
+def list_scenarios(include_slow: bool = True) -> Tuple[str, ...]:
+    return tuple(sorted(n for n, s in SCENARIOS.items()
+                        if include_slow or not s.slow))
+
+
+# ---------------------------------------------------------------------------
+# The registry. Adversary node ids cluster at the top of the id range so
+# scenario reports read naturally (honest nodes first).
+# ---------------------------------------------------------------------------
+
+register(Scenario(
+    name="ideal",
+    description="No faults — the paper's synchronous lossless world; the "
+                "networked pipeline must match its ideal-mode behaviour.",
+    rounds=4,
+))
+
+register(Scenario(
+    name="lossy_wan",
+    description="Every link drops 8% of messages with 10±8 ms latency — "
+                "commits/reveals/blocks go missing, quorums still form, "
+                "stragglers converge via catch-up sync.",
+    net=NetworkConfig(link=LinkSpec(base_latency=10.0, jitter=8.0,
+                                    drop_rate=0.08)),
+))
+
+register(Scenario(
+    name="partitioned_edges",
+    description="Nodes {4,5} split from the majority for rounds 2-3: the "
+                "quorate side keeps minting, the minority falls behind, "
+                "heals, and reconverges through catch-up sync.",
+    rounds=7,
+    net=NetworkConfig(partitions=(
+        PartitionSpec(groups=((0, 1, 2, 3), (4, 5)),
+                      start_round=2, end_round=4),)),
+))
+
+register(Scenario(
+    name="byzantine_third",
+    description="⌊N/3⌋ colluding bribery voters (one targeted on a "
+                "colluder, one random) — BTSV must keep electing honest "
+                "leaders with zero safety violations.",
+    adversaries=(BriberyVoter(4, mode="targeted", target=4),
+                 BriberyVoter(5, mode="random")),
+))
+
+register(Scenario(
+    name="leader_crash",
+    description="The elected leader crashes at mint time in rounds 1 and "
+                "3 — BlockMint must re-elect down the advote ranking "
+                "without losing liveness.",
+    adversaries=(LeaderCrash(rounds=(1, 3)),),
+))
+
+register(Scenario(
+    name="lazy_leader",
+    description="Node 5 participates fully but never mints when elected; "
+                "rounds it wins trigger a re-election instead of a stall.",
+    adversaries=(LazyLeader(5),),
+))
+
+register(Scenario(
+    name="commit_withholder",
+    description="Node 5 never broadcasts its commitment: its model misses "
+                "the reveal quorum and is excluded from Eq. 1/votes.",
+    rounds=4,
+    adversaries=(CommitWithholder(5),),
+))
+
+register(Scenario(
+    name="reveal_equivocator",
+    description="Node 5 commits to its trained model but reveals forged "
+                "bytes; HCDS digest checks reject it at every honest node.",
+    rounds=4,
+    adversaries=(RevealEquivocator(5),),
+))
+
+register(Scenario(
+    name="edge_churn",
+    description="Node 5 crashes for rounds 2-3 and rejoins: consensus "
+                "proceeds on the live quorum, the rejoiner catches up.",
+    net=NetworkConfig(churn=(ChurnSpec(node=5, down_from=2, down_until=4),)),
+))
+
+register(Scenario(
+    name="plagiarist",
+    description="Node 3 copies the first honest node's model every round; "
+                "HCDS rejects the duplicate reveal, so the plagiarist "
+                "never enters ME and never leads (§3.2).",
+    rounds=3,
+    n_nodes=4,
+    adversaries=(Plagiarist(3),),
+))
+
+register(Scenario(
+    name="bribery_targeted",
+    description="§7.4 TA: 3 of 8 nodes always vote node 7 (a colluder); "
+                "BTSV collapses their vote weights and the honest argmax "
+                "keeps winning.",
+    rounds=10,
+    n_nodes=8,
+    adversaries=(BriberyVoter(5, mode="targeted", target=7),
+                 BriberyVoter(6, mode="targeted", target=7),
+                 BriberyVoter(7, mode="targeted", target=7)),
+))
+
+register(Scenario(
+    name="bribery_random",
+    description="§7.4 RA: 3 of 8 nodes vote uniformly at random; BTSV "
+                "down-weights the noise voters.",
+    rounds=10,
+    n_nodes=8,
+    adversaries=(BriberyVoter(5, mode="random"),
+                 BriberyVoter(6, mode="random"),
+                 BriberyVoter(7, mode="random")),
+))

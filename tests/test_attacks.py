@@ -1,0 +1,68 @@
+"""Adversary paths promoted from ``examples/attack_simulation.py`` into CI
+(paper §3.2 + §7.4): HCDS rejects plagiarized reveals, BTSV suppresses
+targeted and random bribery. The example is now a thin wrapper over the
+same ``repro.sim`` scenarios exercised here."""
+
+import numpy as np
+import pytest
+
+from repro import sim
+from repro.core.hcds import HCDSNode
+
+
+# ---------------------------------------------------------------------------
+# HCDS unit-level plagiarism rejection (the example's part 1)
+# ---------------------------------------------------------------------------
+
+def test_hcds_rejects_plagiarized_reveal(rng):
+    nodes = [HCDSNode(i) for i in range(3)]
+    models = [{"w": rng.normal(size=(64,)).astype(np.float32)}
+              for _ in range(3)]
+    models[2] = models[0]                   # node 2 plagiarizes node 0
+    pks = {n.node_id: n.keypair.public_key for n in nodes}
+    commits = [n.commit(m, 0) for n, m in zip(nodes, models)]
+    for c in commits:
+        for n in nodes:
+            if n.node_id != c.node_id:
+                assert n.receive_commit(c, pks[c.node_id]).accepted
+    reveals = [n.reveal(0) for n in nodes]
+    receiver = nodes[1]
+    assert receiver.receive_reveal(reveals[0], pks[0]).accepted
+    res = receiver.receive_reveal(reveals[2], pks[2])
+    assert not res.accepted and res.reason == "plagiarized-model"
+
+
+# ---------------------------------------------------------------------------
+# end-to-end scenarios
+# ---------------------------------------------------------------------------
+
+def test_plagiarist_scenario_rejected_every_round():
+    report = sim.run_scenario("plagiarist", seed=0)
+    plag = sim.get_scenario("plagiarist").adversaries[0].node_id
+    assert report.liveness and report.safety_violations == 0
+    for r in report.rounds:
+        assert r.rejected.get(plag) == "plagiarized-model"
+        assert plag not in (r.available or [])
+        assert r.leader != plag             # never elected
+    assert report.honest_leader_rate == 1.0
+
+
+@pytest.mark.parametrize("name", ["bribery_targeted", "bribery_random"])
+def test_bribery_suppressed_by_btsv(name):
+    report = sim.run_scenario(name, seed=0)
+    assert report.liveness and report.safety_violations == 0
+    # BTSV held every round: the bribed votes never displaced the honest
+    # similarity argmax
+    assert report.argmax_leader_rate == 1.0
+    assert report.converged
+
+
+def test_bribery_collapses_malicious_vote_weights():
+    from repro import api
+    run = api.run_bhfl(scenario="bribery_targeted", seed=0)
+    sc = sim.get_scenario("bribery_targeted")
+    mal = sorted(a.node_id for a in sc.adversaries)
+    last = run.history[-1].consensus
+    w = np.asarray(last.btsv.weights)
+    honest = [i for i in range(sc.n_nodes) if i not in mal]
+    assert w[mal].max() < w[honest].min()

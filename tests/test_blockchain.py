@@ -58,6 +58,111 @@ def test_ledger_persistence_roundtrip(tmp_path):
     assert led2.blocks[0].verify_signature(kp.public_key)
 
 
+def _chain(kp, n, leader=0, salt=""):
+    """A valid signed chain of n blocks."""
+    blocks, prev = [], GENESIS_HASH
+    for i in range(n):
+        b = Block(index=i, round=i, leader_id=leader, prev_hash=prev,
+                  model_digests={0: "aa" + salt}, global_model_digest="cc",
+                  votes={0: 0}, vote_weights={0: 1.0},
+                  advotes={0: 1.0}).signed(kp)
+        blocks.append(b)
+        prev = block_hash(b)
+    return blocks
+
+
+def test_node_that_missed_a_round_rejects_stale_prev_hash():
+    """A node at height 1 must reject the network's height-2 block (its
+    prev_hash names a block the node never saw) — then converge via
+    catch-up sync instead of blind append."""
+    kp = crypto.ECDSAKeyPair.generate(b"leader")
+    chain = _chain(kp, 3)
+    behind = Ledger(1)
+    behind.append(chain[0], leader_pk=kp.public_key)
+    with pytest.raises(InvalidBlock, match="prev_hash mismatch"):
+        behind.append(chain[2], leader_pk=kp.public_key)
+    adopted = behind.sync_from(chain, public_keys={0: kp.public_key})
+    assert adopted == 2
+    assert behind.height == 3 and behind.verify_chain()
+    assert behind.head_hash == block_hash(chain[-1])
+
+
+def test_sync_from_diverged_history_raises():
+    kp = crypto.ECDSAKeyPair.generate(b"leader")
+    ours = Ledger(0)
+    for b in _chain(kp, 2, salt="x"):
+        ours.append(b, leader_pk=kp.public_key)
+    theirs = _chain(kp, 3, salt="y")       # longer, different history
+    with pytest.raises(InvalidBlock):
+        ours.sync_from(theirs, public_keys={0: kp.public_key})
+    # equal-length divergence must raise too, not silently "sync" nothing
+    with pytest.raises(InvalidBlock, match="diverges"):
+        ours.sync_from(_chain(kp, 2, salt="y"),
+                       public_keys={0: kp.public_key})
+    assert ours.height == 2
+
+
+def test_fork_choice_adopts_longer_valid_chain():
+    kp = crypto.ECDSAKeyPair.generate(b"leader")
+    ours = Ledger(0)
+    for b in _chain(kp, 2, salt="x"):
+        ours.append(b, leader_pk=kp.public_key)
+    longer = _chain(kp, 4, salt="y")
+    assert ours.fork_choice(longer, public_keys={0: kp.public_key})
+    assert ours.height == 4 and ours.verify_chain()
+    # a shorter chain never replaces ours
+    assert not ours.fork_choice(_chain(kp, 3, salt="z"),
+                                public_keys={0: kp.public_key})
+    assert ours.height == 4
+
+
+def test_fork_choice_equal_height_tie_breaks_on_head_hash():
+    kp = crypto.ECDSAKeyPair.generate(b"leader")
+    a, b = _chain(kp, 2, salt="a"), _chain(kp, 2, salt="b")
+    small, big = sorted((a, b), key=lambda c: block_hash(c[-1]))
+    led = Ledger(0)
+    for blk in big:
+        led.append(blk, leader_pk=kp.public_key)
+    assert led.fork_choice(small)          # smaller head hash wins the tie
+    assert not led.fork_choice(big)        # and the loser cannot flap back
+    assert led.head_hash == block_hash(small[-1])
+
+
+def test_fork_choice_rejects_tampered_candidate():
+    kp = crypto.ECDSAKeyPair.generate(b"leader")
+    imposter = crypto.ECDSAKeyPair.generate(b"imposter")
+    led = Ledger(0)
+    led.append(_chain(kp, 1)[0], leader_pk=kp.public_key)
+    forged = _chain(imposter, 3)           # longer but wrongly signed
+    assert not led.fork_choice(forged, public_keys={0: kp.public_key})
+    assert led.height == 1
+
+
+def test_contract_partial_tally_with_quorum():
+    """Networked mode: the tally proceeds on >= min_submissions votes,
+    treating absent voters as neutral abstentions."""
+    n = 4
+    c = VoteTallyContract(n)
+    preds = np.full((n,), (1 - 0.99) / (n - 1), np.float32)
+    preds[2] = 0.99
+    for i in range(3):                     # node 3's vote never landed
+        c.submit(VoteSubmission(i, 0, 2, preds))
+    with pytest.raises(ContractError):     # strict mode still demands all N
+        c.tally(0)
+    res = c.tally(0, min_submissions=3)
+    assert int(res.leader) == 2
+    assert float(res.advotes[2]) > 0
+
+
+def test_contract_drop_round_clears_partial_state():
+    c = VoteTallyContract(3)
+    c.submit(VoteSubmission(0, 0, 1, np.asarray([0.005, 0.99, 0.005])))
+    c.drop_round(0)
+    # a retry of the same round may resubmit without tripping the
+    # duplicate-submission guard
+    c.submit(VoteSubmission(0, 0, 1, np.asarray([0.005, 0.99, 0.005])))
+
+
 def test_contract_requires_all_submissions():
     c = VoteTallyContract(3)
     c.submit(VoteSubmission(0, 0, 1, np.asarray([0.005, 0.99, 0.005])))

@@ -1,0 +1,252 @@
+"""repro.sim — event-driven BHFL simulator: bus determinism, scenario
+registry, and the fault-scenario acceptance pins (liveness under a
+Byzantine third, leader re-election on crash, ledger convergence after a
+healed partition)."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro import api, sim
+from repro.fl.hfl_runtime import BHFLConfig
+from repro.sim.network import (ChurnSpec, LinkSpec, NetworkConfig,
+                               PartitionSpec, SimNetwork)
+
+
+# ---------------------------------------------------------------------------
+# message bus
+# ---------------------------------------------------------------------------
+
+def _deliveries(seed, drop=0.3):
+    net = SimNetwork(4, NetworkConfig(link=LinkSpec(drop_rate=drop)),
+                     seed=seed)
+    out = []
+    for _ in range(5):
+        d = net.exchange("commit", {i: f"m{i}" for i in range(4)})
+        out.append({r: sorted(s) for r, s in d.items()})
+    return out
+
+
+def test_bus_is_deterministic_per_seed():
+    assert _deliveries(7) == _deliveries(7)
+
+
+def test_partition_blocks_cross_group_traffic():
+    cfg = NetworkConfig(partitions=(
+        PartitionSpec(groups=((0, 1), (2, 3)), start_round=0, end_round=2),))
+    net = SimNetwork(4, cfg, seed=0)
+    d = net.exchange("commit", {i: i for i in range(4)})
+    for recv, senders in d.items():
+        for s in senders:
+            assert {recv, s} <= {0, 1} or {recv, s} <= {2, 3}
+    net.set_round(2)    # healed
+    d = net.exchange("commit", {i: i for i in range(4)})
+    assert all(len(s) == 3 for s in d.values())
+
+
+def test_churn_removes_node_from_alive_set():
+    cfg = NetworkConfig(churn=(ChurnSpec(node=2, down_from=1, down_until=3),))
+    net = SimNetwork(4, cfg, seed=0)
+    assert net.alive() == {0, 1, 2, 3}
+    net.set_round(1)
+    assert net.alive() == {0, 1, 3}
+    net.set_round(3)
+    assert net.alive() == {0, 1, 2, 3}
+
+
+def test_partition_must_cover_all_nodes():
+    with pytest.raises(ValueError, match="cover every node"):
+        SimNetwork(4, NetworkConfig(partitions=(
+            PartitionSpec(groups=((0, 1),), start_round=0, end_round=1),)))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_has_the_core_scenarios():
+    names = sim.list_scenarios()
+    for required in ("lossy_wan", "partitioned_edges", "byzantine_third",
+                     "leader_crash", "plagiarist"):
+        assert required in names
+
+
+def test_unknown_scenario_raises_with_available_names():
+    with pytest.raises(KeyError, match="byzantine_third"):
+        sim.get_scenario("no-such-scenario")
+
+
+def test_default_quorum_is_two_thirds():
+    env = sim.build_env(sim.get_scenario("ideal"), seed=0)
+    assert env.quorum == math.ceil(2 * 6 / 3)
+
+
+# ---------------------------------------------------------------------------
+# acceptance pins (ISSUE 3)
+# ---------------------------------------------------------------------------
+
+def _report_fingerprint(r):
+    """The determinism-relevant view of a ScenarioReport."""
+    return (r.completed_rounds, r.aborted_rounds, r.safety_violations,
+            r.final_heights, r.final_heads,
+            [(x.round, x.leader, x.aborted, x.reelections, x.heads)
+             for x in r.rounds])
+
+
+def test_byzantine_third_deterministic_live_and_safe():
+    """api.run_bhfl(scenario="byzantine_third", seed=0): deterministic,
+    completes all rounds, zero safety violations, every honest node ends
+    at identical chain height/head hash."""
+    runs = [api.run_bhfl(scenario="byzantine_third", seed=0)
+            for _ in range(2)]
+    reports = [run.scenario_report for run in runs]
+    assert _report_fingerprint(reports[0]) == _report_fingerprint(reports[1])
+    r = reports[0]
+    assert r.liveness and r.completed_rounds == r.rounds_requested
+    assert r.safety_violations == 0
+    assert len(set(r.final_heights.values())) == 1
+    assert len(set(r.final_heads.values())) == 1
+    assert runs[0].chain_valid
+    # BTSV held: bribery never displaced the honest similarity argmax
+    assert r.argmax_leader_rate == 1.0
+
+
+def test_leader_crash_reelects_and_stays_live():
+    r = sim.run_scenario("leader_crash", seed=0)
+    assert r.liveness and r.safety_violations == 0
+    assert r.reelections >= 2          # rounds 1 and 3 crash their leader
+    assert r.converged
+    crashed = [x for x in r.rounds if x.round in (1, 3)]
+    assert all(x.reelections >= 1 and not x.aborted for x in crashed)
+
+
+def test_partitioned_edges_diverges_then_converges():
+    r = sim.run_scenario("partitioned_edges", seed=0)
+    assert r.liveness and r.safety_violations == 0
+    assert r.rounds_to_recover >= 1    # minority fell behind mid-run
+    by_round = {x.round: x for x in r.rounds}
+    assert by_round[2].diverged        # partition active
+    assert not by_round[r.rounds_requested - 1].diverged   # healed in-run
+    assert r.converged
+    assert len(set(r.final_heads.values())) == 1
+
+
+def test_lossy_wan_converges_despite_drops():
+    r = sim.run_scenario("lossy_wan", seed=0)
+    assert r.liveness and r.safety_violations == 0 and r.converged
+    dropped = sum(s.get("dropped", 0) for s in r.net_stats.values())
+    assert dropped > 0                 # the faults actually fired
+
+
+def test_scenario_object_and_round_override():
+    sc = sim.get_scenario("ideal")
+    run = api.run_bhfl(scenario=sc, seed=1, rounds=2)
+    assert run.scenario_report.rounds_requested == 2
+    assert run.scenario_report.liveness
+    assert run.chain_height == 2
+
+
+def test_custom_faults_env():
+    """faults= takes a prebuilt SimEnv for ad-hoc injection."""
+    from repro.data.synthetic import make_mnist_like
+    env = sim.build_env(sim.get_scenario("ideal"), seed=3)
+    run = api.run_bhfl(faults=env, n_nodes=6, clients_per_node=2,
+                       fel_iterations=1, rounds=2,
+                       data=make_mnist_like(n_train=256, n_test=64, seed=3))
+    assert run.scenario_report.scenario == "custom"
+    assert run.scenario_report.liveness
+
+
+def test_scenario_and_faults_are_mutually_exclusive():
+    env = sim.build_env(sim.get_scenario("ideal"), seed=0)
+    with pytest.raises(ValueError, match="not both"):
+        api.run_bhfl(scenario="ideal", faults=env)
+
+
+def test_faults_env_size_must_match_run():
+    env = sim.build_env(sim.get_scenario("ideal"), n_nodes=8, seed=0)
+    with pytest.raises(ValueError, match="simulates 8 nodes"):
+        api.run_bhfl(faults=env, n_nodes=6, rounds=1)
+
+
+def test_permanently_crashed_node_is_not_resurrected():
+    """The final sync must not force-feed blocks to a node that is still
+    down — the report shows its stale chain instead of fake convergence."""
+    sc = sim.Scenario(
+        name="perma_crash_adhoc", description="node 5 dies after round 0",
+        rounds=3,
+        net=sim.NetworkConfig(churn=(sim.ChurnSpec(node=5, down_from=1),)))
+    r = api.run_bhfl(scenario=sc, seed=0).scenario_report
+    assert r.liveness                      # 5 live nodes >= quorum of 4
+    assert r.final_heights[5] == 1         # died holding only round 0
+    assert not r.converged                 # truthfully not converged
+
+
+def test_all_honest_down_aborts_round_instead_of_crashing():
+    """Plagiarists with no live honest victim is a liveness gap, not an
+    IndexError."""
+    sc = sim.Scenario(
+        name="dead_honest_adhoc", description="honest nodes all crash",
+        rounds=2, n_nodes=3,
+        adversaries=(sim.Plagiarist(2),),
+        net=sim.NetworkConfig(churn=(sim.ChurnSpec(node=0, down_from=1),
+                                     sim.ChurnSpec(node=1, down_from=1))))
+    r = api.run_bhfl(scenario=sc, seed=0).scenario_report
+    assert not r.rounds[0].aborted
+    assert r.rounds[1].aborted             # no honest model to plagiarize
+    assert not r.liveness
+
+
+def test_safety_violation_survives_reconvergence():
+    """A fork two honest nodes once held is a safety violation even after
+    fork-choice/catch-up sync erased the losing chain."""
+    from types import SimpleNamespace
+    from repro.blockchain.block import GENESIS_HASH, Block
+    from repro.blockchain.ledger import Ledger
+    from repro.core import crypto
+
+    kp = crypto.ECDSAKeyPair.generate(b"leader")
+
+    def chain(salt):
+        led = Ledger(0)
+        led.append(Block(index=0, round=0, leader_id=0,
+                         prev_hash=GENESIS_HASH, model_digests={0: salt},
+                         global_model_digest="gw", votes={0: 0},
+                         vote_weights={0: 1.0}, advotes={0: 1.0}).signed(kp),
+                   leader_pk=kp.public_key)
+        return led
+
+    led_a, led_b = chain("aa"), chain("bb")       # conflicting height 0
+    led_b.node_id = 1
+    env = sim.build_env(sim.get_scenario("ideal"), n_nodes=2, seed=0)
+    env.bind(SimpleNamespace(ledgers=[led_a, led_b],
+                             public_keys={0: kp.public_key}))
+    env.end_round(0, SimpleNamespace(consensus=None, leader_id=-1),
+                  aborted=True)
+    report = env.finalize("forked", seed=0, rounds_requested=1)
+    assert report.safety_violations == 1          # the fork was witnessed
+    assert report.converged                       # ...and later healed
+
+
+# ---------------------------------------------------------------------------
+# run_bhfl keyword hygiene (typo'd scenario=/engine= must not run silently)
+# ---------------------------------------------------------------------------
+
+def test_unknown_kwarg_raises_with_suggestion():
+    with pytest.raises(TypeError, match="did you mean 'scenario'"):
+        api.run_bhfl(scneario="byzantine_third")
+    with pytest.raises(TypeError, match="did you mean 'engine'"):
+        api.run_bhfl(enigne="batched")
+
+
+def test_config_overrides_forwarded_by_name():
+    run = api.run_bhfl(scenario="ideal", seed=0, rounds=1, lr=5e-3,
+                       batch_size=16)
+    assert run.runtime.cfg.lr == 5e-3
+    assert run.runtime.cfg.batch_size == 16
+
+
+def test_config_overrides_conflict_with_explicit_cfg():
+    with pytest.raises(ValueError, match="set them on the BHFLConfig"):
+        api.run_bhfl(cfg=BHFLConfig(), lr=5e-3)
