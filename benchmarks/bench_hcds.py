@@ -7,15 +7,29 @@ Fig. 5(b): Reveal cost vs (N × model complexity)
 
 Model complexity is swept exactly as in the paper: the MLP hidden layer
 width (§7.2, "we change the number of neurons in the hidden layer").
+
+Beyond-paper: ``bench_round_verify_sweep`` times one round's worth of
+signature verification — the N×(N−1) commit-envelope checks every PoFEL
+round performs — under each crypto backend (``naive`` double-and-add,
+``windowed`` per-message tables, ``batch`` dedup + randomized-linear-
+combination), and ``--json`` records the sweep as
+``benchmarks/BENCH_hcds.json`` so the crypto wall-time trajectory
+accumulates per PR next to ``BENCH_consensus_overhead.json``.
 """
 
 from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Optional
 
 import jax
 import numpy as np
 
 from benchmarks.common import emit, time_call
 from repro.core import crypto
+from repro.core.envelope import SignedEnvelope
 from repro.core.hcds import HCDSNode
 from repro.core.serialization import serialize_pytree
 from repro.models.mlp import MLPConfig, mlp_init
@@ -23,6 +37,9 @@ from repro.models.mlp import MLPConfig, mlp_init
 NONCE_LENS = [16, 64, 256, 1024]
 HIDDEN = [64, 128, 256]
 NET_SIZES = [10, 25, 50]
+ROUND_SIZES = [4, 8, 16, 32]    # N for the round-level verify sweep
+NAIVE_MAX_N = 8                 # double-and-add at N=32 would take minutes
+MIN_BATCH_SPEEDUP_AT_16 = 3.0   # acceptance bar: batch vs windowed, N=16
 
 
 def _model(hidden: int):
@@ -114,6 +131,61 @@ def bench_scalar_mul_backends() -> None:
     emit("ecdsa_verify/warm_cache", us_warm, f"speedup={us_cold/us_warm:.1f}x")
 
 
+def bench_round_verify_sweep(results: Optional[dict] = None) -> dict:
+    """Round-level verification cost per backend at N∈{4,8,16,32}.
+
+    The workload is exactly what one PoFEL round pays in the commit phase:
+    every one of N receivers checks the other N−1 senders' commit
+    envelopes — N×(N−1) (tag, PK, digest) verifications. The per-message
+    backends (``naive``, ``windowed``) pay each check individually; the
+    ``batch`` backend hands the same N×(N−1) item list to ``verify_batch``,
+    which dedups the receiver copies to N distinct tags and folds them into
+    one randomized-linear-combination equation. The acceptance bar
+    (``target``) is ≥3× batch-over-windowed at N=16.
+    """
+    sweep: dict = {}
+    for n in ROUND_SIZES:
+        kps = [crypto.ECDSAKeyPair.generate(b"rv" + bytes([i]))
+               for i in range(n)]
+        envs = [SignedEnvelope.seal(
+            "commit", 0, i, crypto.sha256_digest(b"model", bytes([i])),
+            kps[i].private_key) for i in range(n)]
+        # one item per (receiver, sender) pair — the round's real workload
+        items = [(envs[s].signature, kps[s].public_key,
+                  envs[s].signing_digest())
+                 for r in range(n) for s in range(n) if s != r]
+        row: dict = {"n_nodes": n, "verifications": len(items)}
+
+        def per_message(backend):
+            def run():
+                res = crypto.verify_batch(items, backend=backend)
+                assert res.ok
+            return run
+
+        if n <= NAIVE_MAX_N:
+            row["naive_us"] = time_call(per_message("naive"), repeats=1,
+                                        warmup=0)
+            emit(f"hcds_round_verify/naive/N{n}", row["naive_us"])
+        row["windowed_us"] = time_call(per_message("windowed"), repeats=3)
+        emit(f"hcds_round_verify/windowed/N{n}", row["windowed_us"])
+        row["batch_us"] = time_call(per_message("batch"), repeats=3)
+        row["batch_speedup_vs_windowed"] = (row["windowed_us"]
+                                            / row["batch_us"])
+        emit(f"hcds_round_verify/batch/N{n}", row["batch_us"],
+             f"speedup_vs_windowed={row['batch_speedup_vs_windowed']:.1f}x")
+        sweep[f"N{n}"] = row
+    out = {
+        "round_verify": sweep,
+        "target": {"min_batch_speedup_vs_windowed_at_N16":
+                   MIN_BATCH_SPEEDUP_AT_16,
+                   "measured_at_N16":
+                   sweep["N16"]["batch_speedup_vs_windowed"]},
+    }
+    if results is not None:
+        results.update(out)
+    return out
+
+
 def bench_full_round_protocol() -> None:
     """End-to-end HCDS round among N in-process nodes (beyond-paper)."""
     from repro.core.hcds import run_hcds_round
@@ -128,12 +200,26 @@ def bench_full_round_protocol() -> None:
         emit(f"hcds_full_round/N{n}", us, f"msgs={n*(n-1)*2}")
 
 
-def main() -> None:
-    bench_commit_stage()
-    bench_dverify_vs_network()
-    bench_reveal_stage()
-    bench_scalar_mul_backends()
-    bench_full_round_protocol()
+def main(argv: Optional[list] = None) -> None:
+    ap = argparse.ArgumentParser(
+        description="HCDS commit/reveal + crypto-backend benchmarks")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the round-verify sweep (naive/windowed/"
+                         "batch) to this JSON file (BENCH_hcds.json)")
+    ap.add_argument("--sweep-only", action="store_true",
+                    help="run only the round-level verify sweep")
+    args = ap.parse_args(argv)
+    if not args.sweep_only:
+        bench_commit_stage()
+        bench_dverify_vs_network()
+        bench_reveal_stage()
+        bench_scalar_mul_backends()
+        bench_full_round_protocol()
+    results: dict = {}
+    bench_round_verify_sweep(results)
+    if args.json:
+        Path(args.json).write_text(json.dumps(results, indent=2) + "\n")
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

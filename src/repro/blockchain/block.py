@@ -5,6 +5,13 @@ all submitted FEL models W(k) (full weights live in the off-chain model
 store, as any realistic chain would do — the chain stores commitments),
 the updated global model digest, the consensus artifacts (votes, BTS
 scores, vote weights), and the previous block hash.
+
+The leader's signature travels in the same signed-envelope format as every
+other consensus message (``repro.core.envelope``): the tag covers the
+``("block", round, leader)`` header plus the body digest, serialized
+canonically via :meth:`repro.core.crypto.Signature.to_bytes`. Chain-level
+verification (``ledger.verify_chain`` / ``fork_choice``) batches all block
+envelopes into one ``verify_batch`` call instead of verifying per block.
 """
 
 from __future__ import annotations
@@ -14,6 +21,7 @@ from dataclasses import dataclass, field, asdict
 from typing import Any, Dict, Optional
 
 from repro.core import crypto
+from repro.core.envelope import SignedEnvelope
 
 
 @dataclass(frozen=True)
@@ -29,29 +37,40 @@ class Block:
     advotes: Dict[int, float]            # votee -> adjusted tally
     task_id: str = "task-0"
     extra: Dict[str, Any] = field(default_factory=dict)
-    leader_signature: Optional[tuple] = None
+    leader_signature: Optional[crypto.Signature] = None
 
     def body_bytes(self) -> bytes:
         d = asdict(self)
         d.pop("leader_signature")
         return json.dumps(d, sort_keys=True, default=str).encode()
 
+    def envelope(self) -> SignedEnvelope:
+        """The block's signed envelope: what the leader signature covers
+        (requires ``leader_signature``; for an unsigned block it carries a
+        null tag that can never verify)."""
+        sig = (crypto.Signature.coerce(self.leader_signature)
+               if self.leader_signature is not None
+               else crypto.Signature(0, 0, 0))
+        return SignedEnvelope("block", self.round, self.leader_id,
+                              crypto.sha256_digest(self.body_bytes()), sig)
+
     def signed(self, keypair: crypto.ECDSAKeyPair) -> "Block":
-        tag = crypto.dsign(crypto.sha256_digest(self.body_bytes()),
-                           keypair.private_key)
-        return Block(**{**asdict(self), "leader_signature": tag})
+        env = SignedEnvelope.seal(
+            "block", self.round, self.leader_id,
+            crypto.sha256_digest(self.body_bytes()), keypair.private_key)
+        return Block(**{**asdict(self), "leader_signature": env.signature})
 
     def verify_signature(self, leader_pk: crypto.Point) -> bool:
         if self.leader_signature is None:
             return False
-        return crypto.dverify(tuple(self.leader_signature), leader_pk,
-                              crypto.sha256_digest(self.body_bytes()))
+        return self.envelope().verify(leader_pk)
 
 
 def block_hash(block: Block) -> str:
-    return crypto.sha256_digest(
-        block.body_bytes(),
-        json.dumps(block.leader_signature).encode()).hex()
+    sig_hex = (crypto.Signature.coerce(block.leader_signature)
+               .to_bytes().hex()
+               if block.leader_signature is not None else "")
+    return crypto.sha256_digest(block.body_bytes(), sig_hex.encode()).hex()
 
 
 GENESIS_HASH = "0" * 64

@@ -17,6 +17,11 @@ _EXPORTS = {
     "btsv_round": "repro.core.btsv", "init_history": "repro.core.btsv",
     "ConsensusRecord": "repro.core.consensus",
     "PoFELConsensus": "repro.core.consensus",
+    "SignedEnvelope": "repro.core.envelope",
+    "EnvelopeBatchResult": "repro.core.envelope",
+    "verify_envelopes": "repro.core.envelope",
+    "Signature": "repro.core.crypto",
+    "verify_batch": "repro.core.crypto",
     "Commitment": "repro.core.hcds", "HCDSNode": "repro.core.hcds",
     "HCDSResult": "repro.core.hcds", "Reveal": "repro.core.hcds",
     "run_hcds_round": "repro.core.hcds",

@@ -74,7 +74,14 @@ class PoFELConsensus:
         self.g_max = g_max
         self.hcds_nodes = [HCDSNode(i, nonce_len=nonce_len) for i in range(n_nodes)]
         self.public_keys = {n.node_id: n.keypair.public_key for n in self.hcds_nodes}
-        self.contract = VoteTallyContract(n_nodes, btsv_cfg)
+        # the contract knows the consortium's keys, so vote envelopes are
+        # batch-verified (and forgeries attributed) at tally time; every
+        # node has a signer here, so unsigned votes are not a legitimate
+        # path either — a spoofed submission without an envelope must not
+        # count just because it skipped signing
+        self.contract = VoteTallyContract(n_nodes, btsv_cfg,
+                                          public_keys=self.public_keys,
+                                          require_signatures=True)
         self.ledgers = [Ledger(i) for i in range(n_nodes)]
         self.round = 0
         self.phases: List[ConsensusPhase] = self.default_phases()
@@ -86,7 +93,9 @@ class PoFELConsensus:
         return [
             CommitReveal(self.hcds_nodes, self.public_keys),
             ModelEvaluation(),
-            VoteCollection(self.contract),
+            VoteCollection(self.contract,
+                           signers={n.node_id: n.keypair
+                                    for n in self.hcds_nodes}),
             Tally(self.contract),
             BlockMint(self.ledgers, self.hcds_nodes, self.public_keys,
                       self.contract),

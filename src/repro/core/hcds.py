@@ -5,24 +5,41 @@ Two-phase protocol run by every BCFL node e_i at round k:
 Commit stage
     1. draw fixed-length nonce r^i(k)
     2. d^i(k)   = H(r^i(k) || w^i(k))
-    3. tag^i(k) = DSign(d^i(k), SK_i)
-    4. broadcast (d, tag); verify every received (d^l, tag^l) with PK_l
+    3. tag^i(k) = DSign over the commit *envelope* of d^i(k)
+       (``repro.core.envelope`` — the kind/round/sender header is bound
+       into the signature, so commit tags cannot be replayed cross-phase)
+    4. broadcast the commit; verify every received commit's envelope
 
 Reveal stage
-    5. broadcast (r^i(k), w^i(k), tag^i(k))
+    5. broadcast (r^i(k), w^i(k), tag^i(k)) — the same tag, per the paper
     6. for every received reveal: recompute H(r^l || w^l), compare to the
-       committed d^l, then DVerify the tag again against the recomputed hash
+       committed d^l, then re-verify the tag against the commit envelope
+       rebuilt from the recomputed hash
 
 A model revealed without a matching prior commitment — or whose commitment
 digest matches another node's (byte-identical plagiarism) — is rejected.
+
+Verification is *batched per phase*: :func:`run_hcds_round` (and the
+networked ``CommitReveal`` phase in ``repro.core.phases``) collects every
+commit envelope of the round and calls
+:func:`repro.core.envelope.verify_envelopes` once — under the ``batch``
+crypto backend that is one randomized-linear-combination equation instead
+of N×(N−1) double-scalar multiplications. Receivers then record
+already-verified messages through the bookkeeping-only paths
+(``receive_commit(..., verified=True)``); a reveal whose tag and digest
+both match its verified commitment needs no further crypto at all (the
+signature over the identical statement was already checked), so the reveal
+stage degenerates to pure hashing for honest traffic.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Dict, Optional
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
 
 from repro.core import crypto
+from repro.core.envelope import (SignedEnvelope, commit_signing_digest,
+                                 verify_envelopes)
 from repro.core.serialization import serialize_pytree
 
 
@@ -34,6 +51,12 @@ class Commitment:
     round: int
     digest: bytes
     tag: crypto.Signature
+
+    @property
+    def envelope(self) -> SignedEnvelope:
+        """The commit as a signed envelope (what the tag actually signs)."""
+        return SignedEnvelope("commit", self.round, self.node_id,
+                              self.digest, self.tag)
 
 
 @dataclass(frozen=True)
@@ -86,15 +109,20 @@ class HCDSNode:
         if model_bytes is None:
             model_bytes = serialize_pytree(model)
         digest = crypto.sha256_digest(nonce, model_bytes)
-        tag = crypto.dsign(digest, self.keypair.private_key)
+        env = SignedEnvelope.seal("commit", round, self.node_id, digest,
+                                  self.keypair.private_key)
         self._own[round] = (nonce, model_bytes)
-        c = Commitment(self.node_id, round, digest, tag)
-        self.receive_commit(c, self.keypair.public_key)  # record own commit
+        c = Commitment(self.node_id, round, digest, env.signature)
+        # record own commit (self-signed just now — no re-verification)
+        self.receive_commit(c, self.keypair.public_key, verified=True)
         return c
 
-    def receive_commit(self, c: Commitment, sender_pk: crypto.Point) -> HCDSResult:
-        """Alg. 2 lines 5-10: verify tag over digest with the sender's PK."""
-        if not crypto.dverify(c.tag, sender_pk, c.digest):
+    def receive_commit(self, c: Commitment, sender_pk: crypto.Point,
+                       verified: bool = False) -> HCDSResult:
+        """Alg. 2 lines 5-10: verify the commit envelope with the sender's
+        PK. ``verified=True`` skips the signature check (the caller already
+        batch-verified this envelope) but keeps the replay bookkeeping."""
+        if not verified and not c.envelope.verify(sender_pk):
             return HCDSResult(False, "bad-signature")
         per_round = self._commits.setdefault(c.round, {})
         # byte-identical digest from a different node ⇒ replayed commitment
@@ -113,16 +141,27 @@ class HCDSNode:
         self.receive_reveal(r, self.keypair.public_key)
         return r
 
-    def receive_reveal(self, r: Reveal, sender_pk: crypto.Point) -> HCDSResult:
-        """Alg. 2 lines 12-19: binding + signature check of a reveal."""
+    def receive_reveal(self, r: Reveal, sender_pk: crypto.Point,
+                       digest: Optional[bytes] = None) -> HCDSResult:
+        """Alg. 2 lines 12-19: binding + signature check of a reveal.
+
+        ``digest`` lets a batch driver hand in the precomputed H(r‖w) so
+        one round hashes each reveal once instead of once per receiver.
+        A reveal whose tag equals its (already verified) commitment's tag
+        and whose digest binds needs no fresh crypto — the commit envelope
+        signature covered the identical statement.
+        """
         per_round = self._commits.get(r.round, {})
         c = per_round.get(r.node_id)
         if c is None:
             return HCDSResult(False, "no-commitment")
-        digest = crypto.sha256_digest(r.nonce, r.model_bytes)
+        if digest is None:
+            digest = crypto.sha256_digest(r.nonce, r.model_bytes)
         if digest != c.digest:
             return HCDSResult(False, "digest-mismatch")
-        if not crypto.dverify(r.tag, sender_pk, digest):
+        if tuple(r.tag) != tuple(c.tag) and not crypto.dverify(
+                r.tag, sender_pk,
+                commit_signing_digest(r.round, r.node_id, digest)):
             return HCDSResult(False, "bad-signature")
         # plagiarism check: identical model bytes revealed by another node
         for other_id, other in self._reveals.get(r.round, {}).items():
@@ -144,27 +183,37 @@ def run_hcds_round(nodes: list[HCDSNode], models: list[Any], round: int,
 
     Returns {receiver_id: {sender_id: result}} for the reveal stage.
 
-    Each model is serialized exactly once per round: the per-sender bytes
-    are computed up front (or taken from ``model_bytes`` if the caller
-    already has them, e.g. to reuse for block digests) and threaded
-    through ``commit``/``reveal`` instead of being re-derived per message.
+    Each model is serialized exactly once per round (the per-sender bytes
+    are computed up front, or taken from ``model_bytes``), and signature
+    verification happens once per phase: all commit envelopes go through a
+    single ``verify_envelopes`` batch instead of a dverify per
+    (sender, receiver) pair, and each reveal is hashed once with the digest
+    shared across receivers.
     """
     pks = public_keys or {n.node_id: n.keypair.public_key for n in nodes}
     if model_bytes is None:
         model_bytes = [serialize_pytree(m) for m in models]
     commits = [n.commit(m, round, model_bytes=b)
                for n, m, b in zip(nodes, models, model_bytes)]
+    batch = verify_envelopes([c.envelope for c in commits], pks)
+    if not batch.ok:
+        forged = batch.bad_senders([c.envelope for c in commits])
+        raise RuntimeError(f"honest commit rejected: forged envelope from "
+                           f"node(s) {forged}")
     for c in commits:
         for n in nodes:
             if n.node_id != c.node_id:
-                res = n.receive_commit(c, pks[c.node_id])
+                res = n.receive_commit(c, pks[c.node_id], verified=True)
                 if not res.accepted:
                     raise RuntimeError(
                         f"honest commit rejected: {c.node_id}->{n.node_id}: {res.reason}")
     reveals = [n.reveal(round) for n in nodes]
+    digests = {r.node_id: crypto.sha256_digest(r.nonce, r.model_bytes)
+               for r in reveals}
     out: dict[int, dict[int, HCDSResult]] = {n.node_id: {} for n in nodes}
     for r in reveals:
         for n in nodes:
             if n.node_id != r.node_id:
-                out[n.node_id][r.node_id] = n.receive_reveal(r, pks[r.node_id])
+                out[n.node_id][r.node_id] = n.receive_reveal(
+                    r, pks[r.node_id], digest=digests[r.node_id])
     return out

@@ -39,9 +39,11 @@ import numpy as np
 
 from repro.blockchain.block import Block
 from repro.blockchain.ledger import InvalidBlock, Ledger
-from repro.blockchain.smart_contract import VoteSubmission, VoteTallyContract
+from repro.blockchain.smart_contract import (ContractError, VoteSubmission,
+                                             VoteTallyContract)
 from repro.core import crypto
 from repro.core.btsv import BTSVResult
+from repro.core.envelope import commit_signing_digest, verify_envelopes
 from repro.core.hcds import HCDSNode, run_hcds_round
 from repro.core.model_eval import MEResult, model_evaluation_pytrees
 from repro.core.serialization import serialize_pytree
@@ -162,19 +164,54 @@ class CommitReveal(ConsensusPhase):
                 ctx.rejected.setdefault(i, "commit-withheld")
                 env.note("commit_withheld", round=ctx.round, node=i)
                 continue
-            commits[i] = self.nodes[i].commit(ctx.models[i], ctx.round,
-                                              model_bytes=model_bytes[i])
+            c = self.nodes[i].commit(ctx.models[i], ctx.round,
+                                     model_bytes=model_bytes[i])
+            commits[i] = env.mutate_commit(i, c)
+        # one batch verification of the phase's commit envelopes — the
+        # sender set is shared by every receiver, so N×(N−1) per-message
+        # checks collapse into one verify_batch; a failing batch bisects
+        # down to the forged senders (attribution, not just rejection)
+        senders = sorted(commits)
+        batch = verify_envelopes([commits[i].envelope for i in senders],
+                                 self.public_keys)
+        forged_commits = {senders[j] for j in batch.bad}
+        for i in sorted(forged_commits):
+            ctx.rejected[i] = "forged-envelope"
+            env.note("envelope_rejected", kind="commit", round=ctx.round,
+                     node=i)
         for recv, msgs in env.exchange("commit", ctx.round, commits).items():
             for sender, c in msgs.items():
-                self.nodes[recv].receive_commit(c, self.public_keys[sender])
+                if sender in forged_commits:
+                    continue        # every receiver rejects the forged tag
+                self.nodes[recv].receive_commit(c, self.public_keys[sender],
+                                                verified=True)
         # a node that never committed has nothing to reveal
         reveals = {i: env.mutate_reveal(i, self.nodes[i].reveal(ctx.round))
                    for i in commits}
+        # hash each reveal once (shared across receivers) and batch the
+        # Alg. 2 line-15 re-verification for tags that differ from the
+        # sender's commit tag (tag-equal reveals were proven by the commit
+        # batch — same signature over the same envelope statement)
+        digests = {i: crypto.sha256_digest(r.nonce, r.model_bytes)
+                   for i, r in reveals.items()}
+        retagged = [i for i, r in reveals.items()
+                    if tuple(r.tag) != tuple(commits[i].tag)]
+        reveal_bad = crypto.verify_batch(
+            [(reveals[i].tag, self.public_keys[i],
+              commit_signing_digest(ctx.round, i, digests[i]))
+             for i in retagged]).bad
+        forged_reveals = {retagged[j] for j in reveal_bad}
+        for i in sorted(forged_reveals):
+            ctx.rejected.setdefault(i, "forged-envelope")
+            env.note("envelope_rejected", kind="reveal", round=ctx.round,
+                     node=i)
         accepted = {i: 1 for i in commits}      # every node holds its own
         for recv, msgs in env.exchange("reveal", ctx.round, reveals).items():
             for sender, r in msgs.items():
+                if sender in forged_reveals:
+                    continue
                 res = self.nodes[recv].receive_reveal(
-                    r, self.public_keys[sender])
+                    r, self.public_keys[sender], digest=digests[sender])
                 if res.accepted:
                     accepted[sender] += 1
                 elif (res.reason != "no-commitment"
@@ -227,12 +264,27 @@ class ModelEvaluation(ConsensusPhase):
 class VoteCollection(ConsensusPhase):
     """Alg. 1 line 4 — every node submits (vote, predictions) to the
     vote-tally contract. ``ctx.vote_hook`` lets experiments model malicious
-    voters (bribery / random attacks, §7.4)."""
+    voters (bribery / random attacks, §7.4).
+
+    With ``signers`` (node keypairs), every submission travels as a signed
+    vote envelope — the contract batch-verifies them at tally time, so a
+    bribed vote is attributable to its signer instead of resting on trust.
+    """
 
     name = "vote_collection"
 
-    def __init__(self, contract: VoteTallyContract):
+    def __init__(self, contract: VoteTallyContract,
+                 signers: Optional[Dict[int, crypto.ECDSAKeyPair]] = None):
         self.contract = contract
+        self.signers = signers or {}
+
+    def _submission(self, node_id: int, round: int, vote: int,
+                    preds: np.ndarray) -> VoteSubmission:
+        kp = self.signers.get(node_id)
+        if kp is None:
+            return VoteSubmission(node_id, round, vote, preds)
+        return VoteSubmission.signed(node_id, round, vote, preds,
+                                     kp.private_key)
 
     def run(self, ctx: RoundContext) -> None:
         if ctx.evaluation is None:
@@ -254,7 +306,7 @@ class VoteCollection(ConsensusPhase):
             votes[i] = vote_i
             preds[i] = preds_i
             self.contract.submit(
-                VoteSubmission(i, ctx.round, int(vote_i), preds_i))
+                self._submission(i, ctx.round, int(vote_i), preds_i))
         ctx.votes = votes
         ctx.predictions = preds
 
@@ -285,10 +337,19 @@ class VoteCollection(ConsensusPhase):
             if i not in landed:
                 env.note("vote_lost", round=ctx.round, node=i)
                 continue
+            sub = env.mutate_vote_submission(
+                i, self._submission(i, ctx.round, int(vote_i), preds_i))
+            try:
+                self.contract.submit(sub)
+            except ContractError as e:
+                # a malformed/unbound adversarial envelope is rejected at
+                # the contract door — an attributed protocol violation,
+                # not a crash
+                env.note("envelope_rejected", kind="vote", round=ctx.round,
+                         node=i, reason=str(e))
+                continue
             votes[i] = vote_i
             preds[i] = preds_i
-            self.contract.submit(
-                VoteSubmission(i, ctx.round, int(vote_i), preds_i))
         ctx.votes = votes
         ctx.predictions = preds
 
@@ -305,7 +366,6 @@ class Tally(ConsensusPhase):
         if ctx.env is None:
             ctx.btsv = self.contract.tally(ctx.round)
         else:
-            from repro.blockchain.smart_contract import ContractError
             try:
                 ctx.btsv = self.contract.tally(
                     ctx.round, min_submissions=ctx.env.quorum)
@@ -316,6 +376,13 @@ class Tally(ConsensusPhase):
                 raise QuorumNotReached(
                     f"round {ctx.round}: vote quorum not reached "
                     f"({e})") from e
+            # forged vote envelopes the batch verification dropped, with
+            # the attributed signer — surfaced in the scenario report
+            for node, reason in sorted(
+                    self.contract.rejected_votes.get(ctx.round, {}).items()):
+                ctx.env.note("envelope_rejected", kind="vote",
+                             round=ctx.round, node=node, reason=reason)
+                ctx.rejected.setdefault(node, reason)
         ctx.leader = int(ctx.btsv.leader)
 
 
@@ -355,9 +422,14 @@ class BlockMint(ConsensusPhase):
             res = self.contract.result(b.round)
             return int(res.leader) if res is not None else -1
 
+        # the identical block envelope reaches every node — verify it as
+        # one batch call up front instead of once per ledger append
+        if not verify_envelopes([block.envelope()], self.public_keys).ok:
+            raise InvalidBlock(
+                f"round {ctx.round}: minted block's leader signature "
+                f"failed envelope verification")
         for ledger in self.ledgers:
-            ledger.append(block, leader_pk=self.public_keys[leader],
-                          retally=retally)
+            ledger.append(block, leader_pk=None, retally=retally)
         ctx.block = block
 
     def _mint(self, ctx: RoundContext, leader: int,
@@ -433,8 +505,13 @@ class BlockMint(ConsensusPhase):
             allowed = ranking[:attempts + 1]
             return b.leader_id if b.leader_id in allowed else -1
 
-        led.append(block, leader_pk=self.public_keys[leader],
-                   retally=plausible)
+        # one envelope batch check covers the block for every receiver it
+        # reaches this round (the bus delivers the identical object)
+        if not verify_envelopes([block.envelope()], self.public_keys).ok:
+            raise InvalidBlock(
+                f"round {ctx.round}: minted block's leader signature "
+                f"failed envelope verification")
+        led.append(block, leader_pk=None, retally=plausible)
         deliveries = env.exchange("block", ctx.round, {leader: block})
         behind: List[int] = []
         for recv in sorted(env.alive()):
@@ -455,8 +532,8 @@ class BlockMint(ConsensusPhase):
                 except InvalidBlock:
                     rled.fork_choice(led.blocks, self.public_keys)
             if rled.head_hash == block.prev_hash:
-                rled.append(block, leader_pk=self.public_keys[leader],
-                            retally=plausible)
+                # signature already checked by the phase-level batch above
+                rled.append(block, leader_pk=None, retally=plausible)
             elif rled.head_hash != led.head_hash:
                 env.note("append_failed", round=ctx.round, node=recv)
                 behind.append(recv)

@@ -137,7 +137,14 @@ class MLPAdapter(_SerializationFlatten):
             float(mlp_loss(params, x, y, cfg=self.cfg)))
 
     def batched_train_spec(self):
-        """Batched in-graph FEL support (``repro.fl.batched_fel``)."""
+        """Batched in-graph FEL support (``repro.fl.batched_fel``).
+
+        Memoized per adapter: the spec's ``per_example_loss`` identity keys
+        the engine's shared jit cache, so runtimes rebuilt from the same
+        adapter at shape-bucket-compatible scales reuse one compiled round
+        program instead of re-tracing."""
+        if getattr(self, "_batched_spec", None) is not None:
+            return self._batched_spec
         import numpy as np
         from repro.fl.batched_fel import BatchedTrainSpec
         from repro.models.mlp import mlp_per_example_loss
@@ -151,9 +158,10 @@ class MLPAdapter(_SerializationFlatten):
             return mlp_per_example_loss(params, batch["x"], batch["y"],
                                         cfg=cfg, train=True, dropout_key=key)
 
-        return BatchedTrainSpec(stack, per_example, self.local_epochs,
-                                self.batch_size, self.lr, self.momentum,
-                                self.decay)
+        self._batched_spec = BatchedTrainSpec(
+            stack, per_example, self.local_epochs, self.batch_size, self.lr,
+            self.momentum, self.decay)
+        return self._batched_spec
 
 
 # ---------------------------------------------------------------------------
@@ -208,7 +216,11 @@ class LMAdapter(_SerializationFlatten):
         CE plus the (batch-global) aux term, so for the dense/ssm families
         (aux ≡ 0) the masked-mean reduction reproduces ``Model.loss``
         exactly. MoE families would see a padding-dependent aux term —
-        route those through the reference loop."""
+        route those through the reference loop.
+
+        Memoized per adapter (see :meth:`MLPAdapter.batched_train_spec`)."""
+        if getattr(self, "_batched_spec", None) is not None:
+            return self._batched_spec
         import numpy as np
         from repro.fl.batched_fel import BatchedTrainSpec
         from repro.models.model_api import DEFAULT_AUX_WEIGHT
@@ -229,9 +241,10 @@ class LMAdapter(_SerializationFlatten):
             gold = jnp.sum(jnp.where(mask, logits, 0.0), axis=-1)
             return jnp.mean(lse - gold, axis=-1) + DEFAULT_AUX_WEIGHT * aux
 
-        return BatchedTrainSpec(stack, per_example, self.local_epochs,
-                                self.batch_size, self.lr, self.momentum,
-                                self.decay)
+        self._batched_spec = BatchedTrainSpec(
+            stack, per_example, self.local_epochs, self.batch_size, self.lr,
+            self.momentum, self.decay)
+        return self._batched_spec
 
     def evaluate(self, params: Any, dataset: Any) -> EvalResult:
         from repro.models.model_api import DEFAULT_AUX_WEIGHT, _token_ce_loss

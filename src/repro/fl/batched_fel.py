@@ -25,12 +25,28 @@ advance the key or the decay step counter), and FedAvg weights that zero
 out padded/empty clients exactly. ``tests/test_batched_fel.py`` pins the
 two paths against each other, including ragged/empty shards and the
 plagiarist path.
+
+Shape bucketing (``bucket=True`` / ``BHFLConfig(shape_bucketing=True)``):
+the client, sample, step, and batch dimensions are padded up to the next
+power of two (padding is masked, so it is bit-exact — a zero FedAvg
+weight, an inactive step, or a zero-masked batch row adds exact zeros).
+Together with the module-level jit cache keyed on the training spec (the
+padded shapes key jax's own cache), a runtime rebuilt at a nearby scale —
+one more client per cluster, a somewhat larger shard — lands in the same
+bucket and reuses the already-compiled round program instead of paying a
+fresh XLA compile. :func:`compile_count` exposes the trace counter so
+tests can pin the cache-hit behaviour. Bucketing trades some wasted
+device compute (padded client slots still run their masked steps) for
+compile reuse, so it defaults OFF — turn it on when runtimes are rebuilt
+frequently at many scales (the ROADMAP's sweep/serving case); exactly
+matching shapes share compiles either way via the module cache.
 """
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Any, Callable, List, Optional
+from typing import Any, Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +54,30 @@ import numpy as np
 
 from repro.core.serialization import flatten_pytree, unflatten_pytree_device
 from repro.fl.hierarchy import FELCluster
+
+
+def _next_pow2(x: int) -> int:
+    """The bucket boundary: smallest power of two ≥ x (min 1)."""
+    return 1 if x <= 1 else 1 << (x - 1).bit_length()
+
+
+# jitted round programs shared across engine instances: keyed on the
+# training spec (loss fn identity + hyperparameters) and the static build
+# flags; argument shapes/dtypes key jax.jit's own cache underneath. Two
+# runtimes whose bucketed shapes coincide therefore reuse one compiled
+# executable — the point of the pow2 bucketing above. Bounded FIFO: the
+# key contains the spec's loss closure, which is fresh per adapter
+# instance, so default-adapter runs (one adapter per runtime) would
+# otherwise accumulate immortal never-hit entries across a sweep.
+_ROUND_FN_CACHE: "OrderedDict[Tuple, Any]" = OrderedDict()
+_ROUND_FN_CACHE_MAX = 32
+_TRACE_COUNT = [0]
+
+
+def compile_count() -> int:
+    """How many times a batched round program has been traced (≈ compiled)
+    in this process — the observable for shape-bucket cache-hit tests."""
+    return _TRACE_COUNT[0]
 
 
 @dataclass(frozen=True)
@@ -70,11 +110,13 @@ class BatchedFELEngine:
     """
 
     def __init__(self, clusters: List[FELCluster], spec: BatchedTrainSpec,
-                 fel_iterations: int, template_params: Any):
+                 fel_iterations: int, template_params: Any,
+                 bucket: bool = False):
         if fel_iterations < 1:
             raise ValueError(f"fel_iterations must be >= 1, got {fel_iterations}")
         self.spec = spec
         self.fel_iterations = int(fel_iterations)
+        self.bucket = bool(bucket)
         self.n_clusters = len(clusters)
         self.n_clients = max((len(c.clients) for c in clusters), default=0)
         if self.n_clusters == 0 or self.n_clients == 0:
@@ -82,7 +124,16 @@ class BatchedFELEngine:
                              "with at least one client")
         self._template = template_params
 
-        N, C, E = self.n_clusters, self.n_clients, spec.local_epochs
+        def _dim(x: int) -> int:
+            """Bucketed axis extent: next pow2 under bucketing, exact else."""
+            return _next_pow2(x) if self.bucket else max(1, int(x))
+
+        # bucket the client axis: padded clients carry zero data, zero
+        # FedAvg weight, and an all-False step mask, so nearby hierarchy
+        # shapes share one compiled program (bit-exact — see module doc)
+        N, E = self.n_clusters, spec.local_epochs
+        C = _dim(self.n_clients)
+        self.n_clients_padded = C
         sizes = np.zeros((N, C), np.int64)
         client_ids = np.zeros((N, C), np.int64)
         for n, cluster in enumerate(clusters):
@@ -99,8 +150,10 @@ class BatchedFELEngine:
         steps = E * nb
         self._bs = bs.astype(np.int32)
         self._nb = nb
-        self.steps_per_iteration = int(max(1, steps.max()))
-        self.batch_pad = int(bs.max())
+        # bucket the step and batch axes too: masked steps advance nothing
+        # and zero-masked batch rows reduce to exact zeros
+        self.steps_per_iteration = _dim(int(steps.max()))
+        self.batch_pad = _dim(int(bs.max()))
 
         T, B = self.steps_per_iteration, self.batch_pad
         stepmask = np.zeros((N, C, T), bool)
@@ -109,8 +162,13 @@ class BatchedFELEngine:
                 stepmask[n, c, : steps[n, c]] = True
         self._stepmask = jnp.asarray(stepmask)
         # static fast path: uniform shards (every client runs every step at
-        # full batch width) need none of the per-step masking selects
-        self._uniform = bool(stepmask.all()) and bool((bs == B).all())
+        # full batch width) need none of the per-step masking selects.
+        # Under bucketing the masked path is forced even for a fully
+        # aligned hierarchy — the flag is a static program split, and a
+        # bucket must not fork its compile cache on alignment luck (the
+        # masked reduction is bitwise-identical when the mask is full).
+        self._uniform = (not self.bucket and bool(stepmask.all())
+                         and bool((bs == B).all()))
 
         # stack client shards into padded (N, C, n_max, ...) device leaves
         proto = None
@@ -124,7 +182,7 @@ class BatchedFELEngine:
         if proto is None:
             raise ValueError("batched engine needs at least one non-empty "
                              "client shard")
-        self.n_max = int(max(1, sizes.max()))
+        self.n_max = _dim(int(sizes.max()))
 
         def padded(client) -> Any:
             stacked = (spec.stack(client.data) if client is not None
@@ -145,118 +203,34 @@ class BatchedFELEngine:
         self._sizes_f = jnp.asarray(sizes, jnp.float32)
         self._bs_dev = jnp.asarray(self._bs)
 
-        self._round_fn = jax.jit(self._build_round_fn())
+        self._round_fn = self._cached_round_fn()
 
     # -- the single-device-program round ------------------------------------
-    def _build_round_fn(self):
-        spec = self.spec
-        template = self._template
-        data = self._data
-        sizes_f = self._sizes_f
-        bs_dev = self._bs_dev
-        stepmask = self._stepmask
-        B = self.batch_pad
+    def _cached_round_fn(self):
+        """The jitted round program for this engine's static configuration,
+        shared across engine instances through the module-level cache.
 
-        uniform = self._uniform
+        Everything shape- or value-dependent (the stacked data, sizes,
+        masks, the parameter template) is a traced *argument*, so the only
+        cache-key material is the training spec and the unroll flags —
+        rebuilt runtimes whose bucketed shapes match re-enter jax.jit's own
+        cache and skip compilation entirely.
+        """
+        spec = self.spec
         T, I = self.steps_per_iteration, self.fel_iterations
         unroll_steps = True if T == 1 else 1
         unroll_iters = True if (T == 1 and I <= 8) else 1
+        key = (spec.per_example_loss, spec.lr, spec.momentum, spec.decay,
+               self._uniform, self.batch_pad, unroll_steps, unroll_iters)
+        fn = _ROUND_FN_CACHE.get(key)
+        if fn is None:
+            fn = jax.jit(_build_round_fn(spec, self._uniform, self.batch_pad,
+                                         unroll_steps, unroll_iters))
+            _ROUND_FN_CACHE[key] = fn
+            if len(_ROUND_FN_CACHE) > _ROUND_FN_CACHE_MAX:
+                _ROUND_FN_CACHE.popitem(last=False)
+        return fn
 
-        def train_client(params, data_c, bs_c, idx_c, smask_c, seed):
-            """lax.scan over this client's epochs × batches. Padding steps
-            (smask False) advance neither params, momentum, the decay step
-            counter, nor the PRNG key — exactly the reference loop. When
-            every shard is uniform (no padding steps, full batch width —
-            checked statically at engine build) the masking selects
-            disappear from the compiled program entirely."""
-            key0 = jax.random.key(seed)
-            mom0 = jax.tree.map(jnp.zeros_like, params)
-
-            def step(carry, xs):
-                p, mom, t, key = carry
-                sel, real = xs
-                nkey, sub = jax.random.split(key)
-                batch = jax.tree.map(lambda a: a[sel], data_c)
-
-                def loss_fn(pp):
-                    pe = spec.per_example_loss(pp, batch, sub)
-                    if uniform:
-                        return jnp.mean(pe)
-                    m = ((jnp.arange(B) < bs_c) & real).astype(jnp.float32)
-                    return jnp.sum(pe * m) / jnp.maximum(jnp.sum(m), 1.0)
-
-                loss, grads = jax.value_and_grad(loss_fn)(p)
-                # sgd_update semantics: keras-style time-based decay
-                lr_t = spec.lr / (1.0 + spec.decay * t.astype(jnp.float32))
-                nmom = jax.tree.map(lambda m_, g: spec.momentum * m_ + g,
-                                    mom, grads)
-                newp = jax.tree.map(lambda a, m_: a - lr_t * m_, p, nmom)
-                if uniform:
-                    p, mom = newp, nmom
-                    t = t + 1
-                    key = nkey
-                else:
-                    p = jax.tree.map(
-                        lambda new, old: jnp.where(real, new, old), newp, p)
-                    mom = jax.tree.map(
-                        lambda new, old: jnp.where(real, new, old), nmom, mom)
-                    t = t + real.astype(jnp.int32)
-                    key = jnp.where(real, nkey, key)
-                return (p, mom, t, key), loss
-
-            init = (params, mom0, jnp.zeros((), jnp.int32), key0)
-            # unrolling pays only when the while-loop overhead dominates
-            # (single-step iterations); at larger T it just inflates
-            # compile time for no runtime win
-            (pf, _, _, _), _ = jax.lax.scan(step, init, (idx_c, smask_c),
-                                            unroll=unroll_steps)
-            return pf
-
-        def train_cluster(params0, data_n, sizes_n, bs_n, idx_n, smask_n,
-                          seeds_n):
-            """fel_iterations × (vmap clients → masked FedAvg), in-graph."""
-
-            def fel_iter(params, xs):
-                idx_i, seeds_i = xs
-                locals_ = jax.vmap(train_client,
-                                   in_axes=(None, 0, 0, 0, 0, 0))(
-                    params, data_n, bs_n, idx_i, smask_n, seeds_i)
-                # Eq. 1 at the edge: data-size weights; empty/padded
-                # clients carry exact zero weight so they drop out of the
-                # reduction bit-for-bit
-                tot = jnp.sum(sizes_n)
-                lam = sizes_n / jnp.maximum(tot, 1.0)
-                avg = jax.tree.map(
-                    lambda l: jnp.einsum(
-                        "c,c...->...", lam,
-                        l.astype(jnp.float32)).astype(l.dtype),
-                    locals_)
-                # a dataless cluster keeps the incoming global model; its
-                # consensus weight (|DS_m| = 0) already zeroes it in Eq. 1
-                params = jax.tree.map(lambda a, p: jnp.where(tot > 0, a, p),
-                                      avg, params)
-                return params, None
-
-            final, _ = jax.lax.scan(fel_iter, params0, (idx_n, seeds_n),
-                                    unroll=unroll_iters)
-            return flatten_pytree(final)
-
-        def round_fn(global_flat, idx, seeds):
-            # train in float32: the reference loop's SGD update promotes
-            # low-precision (bf16) params to f32 after the first step
-            # anyway, and a lax.scan carry needs one stable dtype
-            params0 = jax.tree.map(lambda l: l.astype(jnp.float32),
-                                   unflatten_pytree_device(global_flat,
-                                                           template))
-            # (I, N, ...) -> (N, I, ...): the cluster vmap is outermost,
-            # the fel_iterations scan runs inside it
-            idx_n = jnp.swapaxes(idx, 0, 1)
-            seeds_n = jnp.swapaxes(seeds, 0, 1)
-            return jax.vmap(train_cluster,
-                            in_axes=(None, 0, 0, 0, 0, 0, 0))(
-                params0, data, sizes_f, bs_dev, idx_n, stepmask, seeds_n)
-
-        return round_fn
 
     # -- host-side per-round prep (cheap: numpy permutations only) -----------
     def _batch_plan(self, round_seed: int) -> tuple[np.ndarray, np.ndarray]:
@@ -264,7 +238,7 @@ class BatchedFELEngine:
         epoch) the same ``np.random.default_rng(seed + ep).permutation``
         and the same drop-remainder windows, flattened into an index
         tensor (I, N, C, T, B) plus per-client key seeds (I, N, C)."""
-        I, N, C = self.fel_iterations, self.n_clusters, self.n_clients
+        I, N, C = self.fel_iterations, self.n_clusters, self.n_clients_padded
         T, B, E = self.steps_per_iteration, self.batch_pad, self.spec.local_epochs
         idx = np.zeros((I, N, C, T, B), np.int32)
         seeds = np.zeros((I, N, C), np.int64)
@@ -296,11 +270,123 @@ class BatchedFELEngine:
                 "keep cfg.seed * 1000 + rounds within int32 range")
         return self._round_fn(jnp.asarray(global_flat),
                               jnp.asarray(idx),
-                              jnp.asarray(seeds, jnp.int32))
+                              jnp.asarray(seeds, jnp.int32),
+                              self._data, self._sizes_f, self._bs_dev,
+                              self._stepmask, self._template)
+
+
+def _build_round_fn(spec: BatchedTrainSpec, uniform: bool, B: int,
+                    unroll_steps, unroll_iters):
+    """The (unjitted) round program for one static configuration.
+
+    Everything instance-specific — the stacked client data, sizes, batch
+    widths, step masks, and the parameter template — arrives as traced
+    arguments, so one jitted wrapper serves every engine whose bucketed
+    shapes match (see :class:`BatchedFELEngine._cached_round_fn`).
+    """
+
+    def train_client(params, data_c, bs_c, idx_c, smask_c, seed):
+        """lax.scan over this client's epochs × batches. Padding steps
+        (smask False) advance neither params, momentum, the decay step
+        counter, nor the PRNG key — exactly the reference loop. When
+        every shard is uniform (no padding steps, full batch width —
+        checked statically at engine build) the masking selects
+        disappear from the compiled program entirely."""
+        key0 = jax.random.key(seed)
+        mom0 = jax.tree.map(jnp.zeros_like, params)
+
+        def step(carry, xs):
+            p, mom, t, key = carry
+            sel, real = xs
+            nkey, sub = jax.random.split(key)
+            batch = jax.tree.map(lambda a: a[sel], data_c)
+
+            def loss_fn(pp):
+                pe = spec.per_example_loss(pp, batch, sub)
+                if uniform:
+                    return jnp.mean(pe)
+                m = ((jnp.arange(B) < bs_c) & real).astype(jnp.float32)
+                return jnp.sum(pe * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+            loss, grads = jax.value_and_grad(loss_fn)(p)
+            # sgd_update semantics: keras-style time-based decay
+            lr_t = spec.lr / (1.0 + spec.decay * t.astype(jnp.float32))
+            nmom = jax.tree.map(lambda m_, g: spec.momentum * m_ + g,
+                                mom, grads)
+            newp = jax.tree.map(lambda a, m_: a - lr_t * m_, p, nmom)
+            if uniform:
+                p, mom = newp, nmom
+                t = t + 1
+                key = nkey
+            else:
+                p = jax.tree.map(
+                    lambda new, old: jnp.where(real, new, old), newp, p)
+                mom = jax.tree.map(
+                    lambda new, old: jnp.where(real, new, old), nmom, mom)
+                t = t + real.astype(jnp.int32)
+                key = jnp.where(real, nkey, key)
+            return (p, mom, t, key), loss
+
+        init = (params, mom0, jnp.zeros((), jnp.int32), key0)
+        # unrolling pays only when the while-loop overhead dominates
+        # (single-step iterations); at larger T it just inflates
+        # compile time for no runtime win
+        (pf, _, _, _), _ = jax.lax.scan(step, init, (idx_c, smask_c),
+                                        unroll=unroll_steps)
+        return pf
+
+    def train_cluster(params0, data_n, sizes_n, bs_n, idx_n, smask_n,
+                      seeds_n):
+        """fel_iterations × (vmap clients → masked FedAvg), in-graph."""
+
+        def fel_iter(params, xs):
+            idx_i, seeds_i = xs
+            locals_ = jax.vmap(train_client,
+                               in_axes=(None, 0, 0, 0, 0, 0))(
+                params, data_n, bs_n, idx_i, smask_n, seeds_i)
+            # Eq. 1 at the edge: data-size weights; empty/padded
+            # clients carry exact zero weight so they drop out of the
+            # reduction bit-for-bit
+            tot = jnp.sum(sizes_n)
+            lam = sizes_n / jnp.maximum(tot, 1.0)
+            avg = jax.tree.map(
+                lambda l: jnp.einsum(
+                    "c,c...->...", lam,
+                    l.astype(jnp.float32)).astype(l.dtype),
+                locals_)
+            # a dataless cluster keeps the incoming global model; its
+            # consensus weight (|DS_m| = 0) already zeroes it in Eq. 1
+            params = jax.tree.map(lambda a, p: jnp.where(tot > 0, a, p),
+                                  avg, params)
+            return params, None
+
+        final, _ = jax.lax.scan(fel_iter, params0, (idx_n, seeds_n),
+                                unroll=unroll_iters)
+        return flatten_pytree(final)
+
+    def round_fn(global_flat, idx, seeds, data, sizes_f, bs_dev, stepmask,
+                 template):
+        _TRACE_COUNT[0] += 1    # runs at trace time only: ≈ compile count
+        # train in float32: the reference loop's SGD update promotes
+        # low-precision (bf16) params to f32 after the first step
+        # anyway, and a lax.scan carry needs one stable dtype
+        params0 = jax.tree.map(lambda l: l.astype(jnp.float32),
+                               unflatten_pytree_device(global_flat,
+                                                       template))
+        # (I, N, ...) -> (N, I, ...): the cluster vmap is outermost,
+        # the fel_iterations scan runs inside it
+        idx_n = jnp.swapaxes(idx, 0, 1)
+        seeds_n = jnp.swapaxes(seeds, 0, 1)
+        return jax.vmap(train_cluster,
+                        in_axes=(None, 0, 0, 0, 0, 0, 0))(
+            params0, data, sizes_f, bs_dev, idx_n, stepmask, seeds_n)
+
+    return round_fn
 
 
 def engine_for(adapter: Any, clusters: List[FELCluster], fel_iterations: int,
-               template_params: Any) -> Optional[BatchedFELEngine]:
+               template_params: Any,
+               bucket: bool = False) -> Optional[BatchedFELEngine]:
     """Build a :class:`BatchedFELEngine` if ``adapter`` exposes a
     ``batched_train_spec()``; None when the adapter has no batched path."""
     spec_fn = getattr(adapter, "batched_train_spec", None)
@@ -309,4 +395,5 @@ def engine_for(adapter: Any, clusters: List[FELCluster], fel_iterations: int,
     spec = spec_fn()
     if spec is None:
         return None
-    return BatchedFELEngine(clusters, spec, fel_iterations, template_params)
+    return BatchedFELEngine(clusters, spec, fel_iterations, template_params,
+                            bucket=bucket)

@@ -65,6 +65,11 @@ class BHFLConfig:
     g_max: float = 0.99
     seed: int = 0
     engine: str = "reference"       # "reference" | "batched" | "auto"
+    # pad the batched engine's client/sample/step/batch dims to the next
+    # power of two so runtimes rebuilt at nearby scales reuse the compiled
+    # round program (repro.fl.batched_fel module doc); costs some masked
+    # device compute per round, so it is opt-in
+    shape_bucketing: bool = False
 
     def default_adapter(self) -> ModelAdapter:
         """The paper's workload: the MNIST MLP with §7.1 hyperparameters."""
@@ -125,7 +130,8 @@ class BHFLRuntime:
             try:
                 self._engine = engine_for(self.adapter, clusters,
                                           cfg.fel_iterations,
-                                          self.global_params)
+                                          self.global_params,
+                                          bucket=cfg.shape_bucketing)
             except ValueError:
                 # degenerate hierarchy (e.g. every shard empty): 'auto'
                 # falls back to the reference loop, 'batched' surfaces it

@@ -18,8 +18,8 @@ or through the facade — ``api.run_bhfl(scenario="byzantine_third")``.
 """
 
 from repro.sim.adversary import (Adversary, BriberyVoter, CommitWithholder,
-                                 LazyLeader, LeaderCrash, Plagiarist,
-                                 RevealEquivocator)
+                                 EnvelopeForger, LazyLeader, LeaderCrash,
+                                 Plagiarist, RevealEquivocator)
 from repro.sim.network import (ChurnSpec, LinkSpec, NetworkConfig,
                                PartitionSpec, SimEnv, SimNetwork)
 from repro.sim.report import RoundReport, ScenarioReport
@@ -34,5 +34,5 @@ __all__ = [
     "SimNetwork", "SimEnv", "NetworkConfig", "LinkSpec", "PartitionSpec",
     "ChurnSpec",
     "Adversary", "Plagiarist", "BriberyVoter", "CommitWithholder",
-    "RevealEquivocator", "LazyLeader", "LeaderCrash",
+    "RevealEquivocator", "EnvelopeForger", "LazyLeader", "LeaderCrash",
 ]

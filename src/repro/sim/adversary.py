@@ -48,8 +48,14 @@ class Adversary:
     def withholds_vote(self, round: int) -> bool:
         return False
 
+    def mutate_commit(self, round: int, commit: Any) -> Any:
+        return commit
+
     def mutate_reveal(self, round: int, reveal: Any) -> Any:
         return reveal
+
+    def mutate_vote_submission(self, round: int, submission: Any) -> Any:
+        return submission
 
     def vote(self, round: int, n: int, honest_vote: int, preds: np.ndarray,
              rng: np.random.Generator
@@ -126,6 +132,51 @@ class RevealEquivocator(Adversary):
         forged = bytes(reveal.model_bytes[:-1]) + bytes(
             [reveal.model_bytes[-1] ^ 0x01])
         return replace(reveal, model_bytes=forged)
+
+
+class EnvelopeForger(Adversary):
+    """Forges at the *message layer*: its broadcasts carry envelopes signed
+    with a key it does not own (a stolen-identity / spoofing attack below
+    the protocol semantics). The phase-level batch verification must fail,
+    bisect, and attribute exactly this node's envelopes
+    (``forged-envelope`` in the round's rejections, counted by
+    ``ScenarioReport.rejected_envelopes``) — without collateral damage to
+    honest traffic verified in the same batch.
+
+    ``kinds`` selects which envelope kinds are forged (default: commits
+    and votes — the two batch-verified broadcast paths with per-sender
+    attribution)."""
+
+    def __init__(self, node_id: int, kinds: Tuple[str, ...] = ("commit",
+                                                               "vote")):
+        super().__init__(node_id)
+        self.kinds = tuple(kinds)
+        # a key this node does NOT own — lazily derived, never registered
+        self._forged_key = None
+
+    def _forged_private_key(self) -> int:
+        if self._forged_key is None:
+            from repro.core.crypto import ECDSAKeyPair
+            self._forged_key = ECDSAKeyPair.generate(
+                b"envelope-forger-" + str(self.node_id).encode())
+        return self._forged_key.private_key
+
+    def mutate_commit(self, round: int, commit: Any) -> Any:
+        if "commit" not in self.kinds:
+            return commit
+        from repro.core.envelope import SignedEnvelope
+        env = SignedEnvelope.seal("commit", round, commit.node_id,
+                                  commit.digest, self._forged_private_key())
+        return replace(commit, tag=env.signature)
+
+    def mutate_vote_submission(self, round: int, submission: Any) -> Any:
+        if "vote" not in self.kinds or submission.envelope is None:
+            return submission
+        from repro.core.envelope import SignedEnvelope
+        env = SignedEnvelope.seal(
+            "vote", round, submission.node_id,
+            submission.envelope.payload_digest, self._forged_private_key())
+        return replace(submission, envelope=env)
 
 
 class LazyLeader(Adversary):

@@ -253,10 +253,20 @@ class SimEnv:
         adv = self._by_node.get(i)
         return adv is not None and adv.withholds_vote(self.network.round)
 
+    def mutate_commit(self, i: int, commit: Any) -> Any:
+        adv = self._by_node.get(i)
+        return commit if adv is None else adv.mutate_commit(
+            self.network.round, commit)
+
     def mutate_reveal(self, i: int, reveal: Any) -> Any:
         adv = self._by_node.get(i)
         return reveal if adv is None else adv.mutate_reveal(
             self.network.round, reveal)
+
+    def mutate_vote_submission(self, i: int, submission: Any) -> Any:
+        adv = self._by_node.get(i)
+        return submission if adv is None else adv.mutate_vote_submission(
+            self.network.round, submission)
 
     def adversary_vote(self, i: int, round: int, honest_vote: int,
                        preds: np.ndarray):

@@ -60,6 +60,9 @@ class ScenarioReport:
     converged: bool                   # all honest chains identical at end
     final_heights: Dict[int, int]
     final_heads: Dict[int, str]
+    # envelopes the batch signature verification rejected, with attribution
+    # (the message-layer forgery count — see repro.core.envelope)
+    rejected_envelopes: int = 0
     rounds: List[RoundReport] = field(default_factory=list)
     events: List[Dict[str, Any]] = field(default_factory=list)
     net_stats: Dict[str, Dict[str, int]] = field(default_factory=dict)
@@ -77,6 +80,7 @@ class ScenarioReport:
                 f"safety_violations={self.safety_violations}, "
                 f"honest_leader_rate={self.honest_leader_rate:.2f}, "
                 f"reelections={self.reelections}, "
+                f"rejected_envelopes={self.rejected_envelopes}, "
                 f"rounds_to_recover={self.rounds_to_recover}, "
                 f"converged={self.converged}")
 
@@ -175,6 +179,8 @@ def build_report(env, scenario: str, seed: int,
         converged=converged,
         final_heights=final_heights,
         final_heads=final_heads,
+        rejected_envelopes=sum(1 for e in env.events
+                               if e.get("event") == "envelope_rejected"),
         rounds=logs,
         events=list(env.events),
         net_stats={k: dict(v) for k, v in env.network.stats.items()},

@@ -19,8 +19,8 @@ from dataclasses import dataclass, field
 from typing import Dict, Tuple
 
 from repro.sim.adversary import (Adversary, BriberyVoter, CommitWithholder,
-                                 LazyLeader, LeaderCrash, Plagiarist,
-                                 RevealEquivocator)
+                                 EnvelopeForger, LazyLeader, LeaderCrash,
+                                 Plagiarist, RevealEquivocator)
 from repro.sim.network import (ChurnSpec, LinkSpec, NetworkConfig,
                                PartitionSpec)
 
@@ -136,6 +136,16 @@ register(Scenario(
                 "bytes; HCDS digest checks reject it at every honest node.",
     rounds=4,
     adversaries=(RevealEquivocator(5),),
+))
+
+register(Scenario(
+    name="forged_envelopes",
+    description="Node 5 signs its commit and vote envelopes with a key it "
+                "does not own: the round-level batch verification fails, "
+                "bisects, and attributes exactly its envelopes — honest "
+                "traffic in the same batch is untouched.",
+    rounds=4,
+    adversaries=(EnvelopeForger(5),),
 ))
 
 register(Scenario(

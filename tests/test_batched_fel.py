@@ -220,6 +220,55 @@ def test_lm_adapter_batched_engine_runs():
     assert rt._global_flat.shape[0] == flatten_pytree(rt.global_params).shape[0]
 
 
+# ---------------------------------------------------------------------------
+# shape bucketing / compile-cache reuse
+# ---------------------------------------------------------------------------
+
+def test_shape_bucketing_reuses_compiled_round():
+    """Runtimes rebuilt at nearby scales (3 vs 4 clients, 96 vs 128 samples
+    per shard — same pow2 buckets) must reuse one compiled round program;
+    a scale in a different bucket must trace fresh. Bucketed padding is
+    masked, so the padded program's output is bit-identical to the exact
+    one."""
+    from repro.fl import batched_fel
+    from repro.fl.adapters import MLPAdapter
+    from repro.models.mlp import MLPConfig
+
+    adapter = MLPAdapter(cfg=MLPConfig(hidden=8))
+
+    def runtime(clients, per_client, bucketing=True):
+        train, _ = make_mnist_like(n_train=2 * clients * per_client,
+                                   n_test=10)
+        cfg = BHFLConfig(n_nodes=2, clients_per_node=clients,
+                         fel_iterations=1, mlp=MLPConfig(hidden=8),
+                         engine="batched", shape_bucketing=bucketing)
+        return BHFLRuntime(build_hierarchy(train, 2, clients, "iid"), cfg,
+                           None, adapter=adapter)
+
+    rt1 = runtime(3, 96)
+    rt1.run_round()
+    count = batched_fel.compile_count()
+    assert rt1._engine.n_clients_padded == 4
+    assert rt1._engine.n_max == 128
+
+    rt2 = runtime(4, 128)               # same buckets: (4 clients, 128, ...)
+    rt2.run_round()
+    assert batched_fel.compile_count() == count     # cache hit, no re-trace
+    assert rt2._engine._round_fn is rt1._engine._round_fn
+
+    rt3 = runtime(5, 96)                # 5 clients -> pad 8: a new bucket
+    rt3.run_round()
+    assert batched_fel.compile_count() == count + 1
+
+    # bucketed padding is bit-exact against the unbucketed program
+    # (same starting global model through both engines)
+    exact = runtime(3, 96, bucketing=False)
+    start = exact._global_flat
+    W_exact = np.asarray(exact._engine.run_round(start, 1))
+    W_bucket = np.asarray(rt1._engine.run_round(start, 1))
+    np.testing.assert_array_equal(W_exact, W_bucket)
+
+
 def test_api_engine_kwarg():
     from repro import api
     run = api.run_bhfl(model="mlp", n_nodes=2, clients_per_node=2,

@@ -139,6 +139,23 @@ def test_lossy_wan_converges_despite_drops():
     assert dropped > 0                 # the faults actually fired
 
 
+def test_forged_envelopes_attributed_and_rejected():
+    """Message-layer forgery (signatures by a key the node does not own):
+    batch verification bisects and attributes exactly the forger's commit
+    and vote envelopes; honest traffic in the same batches is untouched
+    and the run stays live, safe, and converged."""
+    r = sim.run_scenario("forged_envelopes", seed=0)
+    assert r.liveness and r.safety_violations == 0 and r.converged
+    assert r.rejected_envelopes == 2 * r.rounds_requested   # commit + vote
+    for x in r.rounds:
+        assert x.rejected.get(5) == "forged-envelope"
+        assert 5 not in (x.available or [])
+    blamed = {e["node"] for e in r.events
+              if e["event"] == "envelope_rejected"}
+    assert blamed == {5}                  # no honest node was ever accused
+    assert r.honest_leader_rate == 1.0
+
+
 def test_scenario_object_and_round_override():
     sc = sim.get_scenario("ideal")
     run = api.run_bhfl(scenario=sc, seed=1, rounds=2)
