@@ -15,20 +15,33 @@ round performs — under each crypto backend (``naive`` double-and-add,
 combination), and ``--json`` records the sweep as
 ``benchmarks/BENCH_hcds.json`` so the crypto wall-time trajectory
 accumulates per PR next to ``BENCH_consensus_overhead.json``.
+
+``bench_crypto_backend_sweep`` (``--crypto-json``, recorded as
+``benchmarks/BENCH_crypto.json``) is the point-arithmetic sweep for the
+Jacobian/JAX rework: every backend (naive / windowed / batch / jax) at
+N ∈ {4, 8, 16, 32}, measured against an in-process reconstruction of
+PR 4's *affine* batch path (``curve.affine_*`` — one modular inversion
+per point add), so the speedup is apples-to-apples on the machine that
+ran the sweep. The acceptance bar is the default backend ≥2.5× over the
+PR-4 affine batch at N=16.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import time
 from pathlib import Path
 from typing import Optional
 
 import jax
 import numpy as np
 
+from collections import OrderedDict
+
 from benchmarks.common import emit, time_call
 from repro.core import crypto
+from repro.core.crypto import curve
 from repro.core.envelope import SignedEnvelope
 from repro.core.hcds import HCDSNode
 from repro.core.serialization import serialize_pytree
@@ -40,6 +53,9 @@ NET_SIZES = [10, 25, 50]
 ROUND_SIZES = [4, 8, 16, 32]    # N for the round-level verify sweep
 NAIVE_MAX_N = 8                 # double-and-add at N=32 would take minutes
 MIN_BATCH_SPEEDUP_AT_16 = 3.0   # acceptance bar: batch vs windowed, N=16
+# acceptance bar for the Jacobian/JAX PR: default backend vs PR-4's
+# affine batch path, round-level verify at N=16
+MIN_DEFAULT_SPEEDUP_VS_PR4_AT_16 = 2.5
 
 
 def _model(hidden: int):
@@ -158,8 +174,9 @@ def bench_round_verify_sweep(results: Optional[dict] = None) -> dict:
 
         def per_message(backend):
             def run():
-                res = crypto.verify_batch(items, backend=backend)
-                assert res.ok
+                if not crypto.verify_batch(items, backend=backend).ok:
+                    raise RuntimeError(
+                        f"backend {backend!r} rejected a valid batch")
             return run
 
         if n <= NAIVE_MAX_N:
@@ -186,6 +203,128 @@ def bench_round_verify_sweep(results: Optional[dict] = None) -> dict:
     return out
 
 
+def _round_items(n: int):
+    """One round's verification workload: every one of N receivers checks
+    the other N−1 senders' commit envelopes."""
+    kps = [crypto.ECDSAKeyPair.generate(b"cb" + bytes([i])) for i in range(n)]
+    envs = [SignedEnvelope.seal(
+        "commit", 0, i, crypto.sha256_digest(b"model", bytes([i])),
+        kps[i].private_key) for i in range(n)]
+    return [(envs[s].signature, kps[s].public_key, envs[s].signing_digest())
+            for r in range(n) for s in range(n) if s != r]
+
+
+def _pr4_affine_verify_batch(items) -> bool:
+    """PR 4's ``batch`` path, reconstructed from the affine baseline ops
+    (``curve.affine_*``): dedup + ONE randomized-linear-combination
+    equation where every point add pays a modular inversion. Timed in the
+    same process as the Jacobian/JAX backends so the recorded speedups are
+    hardware-independent ratios, not cross-machine folklore."""
+    distinct: "OrderedDict[tuple, None]" = OrderedDict()
+    for tag, pk, d in items:
+        distinct.setdefault((tuple(tag), pk, d), None)
+    sg = 0
+    acc = curve.INF
+    r_terms = []
+    for (tag, pk, d) in distinct:
+        sig = crypto.Signature(*tag)
+        R = crypto._recover_R(sig)
+        assert R is not None
+        w = crypto._inv_mod(sig.s, crypto._N)
+        a = crypto._rlc_coefficient()
+        sg = (sg + a * (crypto._bits2int(d) * w % crypto._N)) % crypto._N
+        u2 = sig.r * w % crypto._N
+        acc = curve.affine_point_add(
+            acc, curve.affine_point_mul_windowed(a * u2 % crypto._N,
+                                                 curve.pk_table(pk)))
+        r_terms.append((a, (R[0], (-R[1]) % crypto._P)))
+    acc = curve.affine_point_add(
+        acc, curve.affine_point_mul_windowed(sg, curve.g_table()))
+    acc = curve.affine_point_add(acc, curve.affine_multi_scalar(r_terms))
+    return curve.is_inf(acc)
+
+
+def bench_crypto_backend_sweep(results: Optional[dict] = None) -> dict:
+    """Point-arithmetic backend sweep (BENCH_crypto.json).
+
+    Round-level ``verify_batch`` cost per backend at N ∈ {4, 8, 16, 32},
+    plus the in-process PR-4 affine batch baseline. ``jax`` is warmed
+    first (one compile per lane bucket — recorded separately as
+    ``jax_compile_s``) so the steady-state number is what a long-running
+    round pipeline would see.
+    """
+    try:
+        crypto._get_ops("jax")
+        have_jax = True
+    except Exception as e:          # jax-less installs still get the sweep
+        have_jax = False
+        emit("crypto_backends/jax", 0.0, f"unavailable: {e}")
+    sweep: dict = {}
+    jax_compile_s = {}
+    for n in ROUND_SIZES:
+        items = _round_items(n)
+        row: dict = {"n_nodes": n, "verifications": len(items)}
+
+        def run_backend(backend):
+            # explicit raise, not assert: the timed workload must survive
+            # `python -O`, and a backend wrongly rejecting the valid batch
+            # must poison the sweep instead of the recorded numbers
+            def run():
+                if not crypto.verify_batch(items, backend=backend).ok:
+                    raise RuntimeError(
+                        f"backend {backend!r} rejected a valid batch")
+            return run
+
+        def run_pr4_baseline():
+            if not _pr4_affine_verify_batch(items):
+                raise RuntimeError("PR-4 affine baseline rejected a "
+                                   "valid batch")
+
+        if n <= NAIVE_MAX_N:
+            row["naive_us"] = time_call(run_backend("naive"), repeats=1,
+                                        warmup=1)
+            emit(f"crypto_backends/naive/N{n}", row["naive_us"])
+        row["windowed_us"] = time_call(run_backend("windowed"), repeats=3)
+        emit(f"crypto_backends/windowed/N{n}", row["windowed_us"])
+        row["pr4_affine_batch_us"] = time_call(run_pr4_baseline, repeats=3)
+        emit(f"crypto_backends/pr4_affine_batch/N{n}",
+             row["pr4_affine_batch_us"])
+        row["batch_us"] = time_call(run_backend("batch"), repeats=3)
+        row["batch_speedup_vs_pr4"] = (row["pr4_affine_batch_us"]
+                                       / row["batch_us"])
+        emit(f"crypto_backends/batch/N{n}", row["batch_us"],
+             f"speedup_vs_pr4={row['batch_speedup_vs_pr4']:.1f}x")
+        if have_jax:
+            t0 = time.perf_counter()
+            run_backend("jax")()        # first call compiles this bucket
+            jax_compile_s[f"N{n}"] = time.perf_counter() - t0
+            row["jax_us"] = time_call(run_backend("jax"), repeats=3)
+            row["jax_speedup_vs_pr4"] = (row["pr4_affine_batch_us"]
+                                         / row["jax_us"])
+            emit(f"crypto_backends/jax/N{n}", row["jax_us"],
+                 f"speedup_vs_pr4={row['jax_speedup_vs_pr4']:.1f}x")
+        sweep[f"N{n}"] = row
+    default = crypto.get_backend()
+    if f"{default}_us" not in sweep["N16"]:
+        raise RuntimeError(
+            f"default backend {default!r} was not timed at N=16 — the "
+            f"acceptance metric cannot be recorded against it")
+    measured = sweep["N16"]["pr4_affine_batch_us"] / sweep["N16"][f"{default}_us"]
+    out = {
+        "point_backends": sweep,
+        "default_backend": default,
+        "jax_compile_s": jax_compile_s,
+        "target": {
+            "min_default_speedup_vs_pr4_batch_at_N16":
+                MIN_DEFAULT_SPEEDUP_VS_PR4_AT_16,
+            "measured_at_N16": measured,
+        },
+    }
+    if results is not None:
+        results.update(out)
+    return out
+
+
 def bench_full_round_protocol() -> None:
     """End-to-end HCDS round among N in-process nodes (beyond-paper)."""
     from repro.core.hcds import run_hcds_round
@@ -206,8 +345,12 @@ def main(argv: Optional[list] = None) -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the round-verify sweep (naive/windowed/"
                          "batch) to this JSON file (BENCH_hcds.json)")
+    ap.add_argument("--crypto-json", default=None, metavar="PATH",
+                    help="run the point-arithmetic backend sweep (naive/"
+                         "windowed/batch/jax vs the PR-4 affine baseline) "
+                         "and write it to this JSON file (BENCH_crypto.json)")
     ap.add_argument("--sweep-only", action="store_true",
-                    help="run only the round-level verify sweep")
+                    help="run only the round-level verify sweep(s)")
     args = ap.parse_args(argv)
     if not args.sweep_only:
         bench_commit_stage()
@@ -220,6 +363,12 @@ def main(argv: Optional[list] = None) -> None:
     if args.json:
         Path(args.json).write_text(json.dumps(results, indent=2) + "\n")
         print(f"wrote {args.json}")
+    if args.crypto_json:
+        crypto_results: dict = {}
+        bench_crypto_backend_sweep(crypto_results)
+        Path(args.crypto_json).write_text(
+            json.dumps(crypto_results, indent=2) + "\n")
+        print(f"wrote {args.crypto_json}")
 
 
 if __name__ == "__main__":

@@ -1,15 +1,15 @@
 """Cryptographic primitives for the HCDS scheme (paper §4.1).
 
 The paper uses SHA-256 as the hash function ``H`` and ECDSA (secp256k1) as
-the digital-signature algorithm (``DSign`` / ``DVerify``).  This module is a
-dependency-free implementation of both:
+the digital-signature algorithm (``DSign`` / ``DVerify``).  This package is
+a dependency-free implementation of both:
 
 * ``sha256_digest`` — H(r || w) over a nonce and a serialized model.
 * ``ECDSAKeyPair`` / ``dsign`` / ``dverify`` — deterministic-nonce (RFC-6979
   style, HMAC-DRBG) ECDSA over secp256k1.
 * ``verify_batch`` — round-level verification of many (tag, PK, digest)
   triples at once, behind a pluggable backend seam
-  (``set_backend("naive" | "windowed" | "batch")``).
+  (``set_backend("naive" | "windowed" | "batch" | "jax")``).
 
 The ``batch`` backend (the default) verifies a whole phase's envelopes with
 one randomized-linear-combination equation: per signature it recovers the
@@ -17,18 +17,32 @@ nonce point R from the recovery bit ``Signature.v``, then checks
 
     (Σ aᵢ·u1ᵢ)·G + Σ (aᵢ·u2ᵢ)·PKᵢ − Σ aᵢ·Rᵢ == ∞
 
-for random 128-bit aᵢ, sharing doublings across all Rᵢ terms
-(Strauss–Shamir simultaneous multi-scalar multiplication). Identical
+for random 128-bit aᵢ, sharing doublings across all Rᵢ terms. Identical
 (tag, PK, digest) triples — a consensus round re-verifies each sender's
 message at N−1 receivers — are deduplicated first, which is where the
 round-level win comes from. A failing batch bisects, so the caller learns
 exactly which signatures were forged (``BatchVerifyResult.bad``) — the
 adversary attribution the simulator's scenario reports depend on.
 
-These run in the *host control plane* of the framework: the TPU graph never
-hashes or signs (there is no MXU/VPU analogue of carry-chain crypto; see
-DESIGN.md §5), matching how a real deployment would pin the blockchain
-control plane to the edge-server CPUs.
+Package layout (the point-arithmetic hot loop lives below the seam):
+
+* ``field``  — prime-field helpers (inversion, batched inversion, sqrt);
+* ``curve``  — secp256k1 in Jacobian coordinates: add/double with no
+  per-op inversion, window tables built with one batched inversion,
+  shared-doubling multi-scalar evaluation (plus the affine legacy ops the
+  benchmarks keep as the pre-Jacobian baseline);
+* ``backends.python`` — the ``CurveOps`` seam and the naive / windowed /
+  batch backends;
+* ``backends.jax`` — the limb-vectorized JAX backend: field elements as
+  8×32-bit limbs in uint64 lanes, the whole RLC batch equation as one
+  jitted multi-scalar program over all deduplicated signatures.
+
+The Python backends run in the *host control plane* of the framework: the
+TPU training graph never hashes or signs. The ``jax`` backend moves the
+round-level batch equation onto the same JAX substrate as the FEL engine
+(still CPU-hosted by default — there is no MXU/VPU analogue of
+carry-chain crypto), so deployments that colocate consensus with
+accelerators can fold verification into the device program stream.
 """
 
 from __future__ import annotations
@@ -39,166 +53,49 @@ import hmac
 import os
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Iterator, List, NamedTuple, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, NamedTuple, Optional, Sequence, Tuple
+
+from repro.core.crypto import curve, field
+from repro.core.crypto.backends.python import (BatchOps, CurveOps, NaiveOps,
+                                               WindowedOps, rlc_coefficient)
 
 # ---------------------------------------------------------------------------
-# secp256k1 curve parameters (SEC 2, v2.0)
+# Back-compat re-exports: the pre-package module exposed these names, and
+# tests/benchmarks/experiments reach for them.
 # ---------------------------------------------------------------------------
-_P = 0xFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFEFFFFFC2F
-_N = 0xFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFEBAAEDCE6AF48A03BBFD25E8CD0364141
-_GX = 0x79BE667EF9DCBBAC55A06295CE870B07029BFCDB2DCE28D959F2815B16F81798
-_GY = 0x483ADA7726A3C4655DA4FBFC0E1108A8FD17B448A68554199C47D08FFB10D4B8
-_A = 0
+_P = field.P
+_N = curve.N
+_GX = curve.GX
+_GY = curve.GY
+_A = curve.A
 
-Point = Tuple[int, int]
-_INF: Point = (0, 0)  # point at infinity sentinel (0,0 is not on the curve)
+Point = curve.Point
+_INF = curve.INF
+_is_inf = curve.is_inf
+_inv_mod = field.inv_mod
+_point_add = curve.affine_point_add
+_point_mul_naive = curve.point_mul_naive
+_strauss_shamir = curve.strauss_shamir
+_multi_scalar = curve.multi_scalar
 
-
-def _inv_mod(a: int, m: int) -> int:
-    return pow(a, -1, m)
-
-
-def _is_inf(p: Point) -> bool:
-    return p[0] == 0 and p[1] == 0
-
-
-def _point_add(p: Point, q: Point) -> Point:
-    if _is_inf(p):
-        return q
-    if _is_inf(q):
-        return p
-    if p[0] == q[0] and (p[1] + q[1]) % _P == 0:
-        return _INF
-    if p == q:
-        lam = (3 * p[0] * p[0] + _A) * _inv_mod(2 * p[1], _P) % _P
-    else:
-        lam = (q[1] - p[1]) * _inv_mod(q[0] - p[0], _P) % _P
-    x = (lam * lam - p[0] - q[0]) % _P
-    y = (lam * (p[0] - x) - p[1]) % _P
-    return (x, y)
-
-
-def _point_mul_naive(k: int, p: Point) -> Point:
-    """Double-and-add scalar multiplication (constant-time not required in
-    this research framework; keys only sign benchmark/e2e traffic)."""
-    acc = _INF
-    addend = p
-    while k:
-        if k & 1:
-            acc = _point_add(acc, addend)
-        addend = _point_add(addend, addend)
-        k >>= 1
-    return acc
-
-
-# -- windowed scalar multiplication -----------------------------------------
-# A 4-bit fixed-window table over a point Q holds d * (16^w * Q) for every
-# window position w and digit d, turning a 256-bit multiply into ≤ 64 point
-# additions (vs ~256 doublings + ~128 additions for double-and-add). The
-# table for the base point G is built once at import-touch; tables for
-# public keys are built on first verify against that key and cached, since
-# one consensus round re-verifies each peer's key O(N) times.
-
-_WINDOW_BITS = 4
-_WINDOW_MASK = (1 << _WINDOW_BITS) - 1
-_N_WINDOWS = (256 + _WINDOW_BITS - 1) // _WINDOW_BITS
-
-WindowTable = Tuple[Tuple[Point, ...], ...]
-
-
-def _build_window_table(p: Point) -> WindowTable:
-    table = []
-    base = p
-    for _ in range(_N_WINDOWS):
-        row = [base]
-        for _ in range(_WINDOW_MASK - 1):
-            row.append(_point_add(row[-1], base))
-        table.append(tuple(row))        # row[d-1] = d * base
-        for _ in range(_WINDOW_BITS):
-            base = _point_add(base, base)
-    return tuple(table)
-
-
-def _point_mul_windowed(k: int, table: WindowTable) -> Point:
-    acc = _INF
-    w = 0
-    while k:
-        d = k & _WINDOW_MASK
-        if d:
-            acc = _point_add(acc, table[w][d - 1])
-        k >>= _WINDOW_BITS
-        w += 1
-    return acc
-
-
-_G_TABLE: Optional[WindowTable] = None
-# public-key tables, keyed by the (x, y) point; bounded FIFO cache
-_PK_TABLES: "OrderedDict[Point, WindowTable]" = OrderedDict()
-_PK_CACHE_MAX = 256
-
-
-def _g_table() -> WindowTable:
-    global _G_TABLE
-    if _G_TABLE is None:
-        _G_TABLE = _build_window_table((_GX, _GY))
-    return _G_TABLE
-
-
-def _pk_table(pk: Point) -> WindowTable:
-    """Cached window table for a public key — ``dverify`` against the same
-    key is O(N) per consensus round, so the one-time precompute amortizes
-    within a single HCDS exchange."""
-    table = _PK_TABLES.get(pk)
-    if table is None:
-        table = _build_window_table(pk)
-        _PK_TABLES[pk] = table
-        if len(_PK_TABLES) > _PK_CACHE_MAX:
-            _PK_TABLES.popitem(last=False)
-    return table
+WindowTable = curve.WindowTable
+_WINDOW_BITS = curve._WINDOW_BITS
+_WINDOW_MASK = curve._WINDOW_MASK
+_N_WINDOWS = curve._N_WINDOWS
+_build_window_table = curve.build_window_table
+_point_mul_windowed = curve.point_mul_windowed
+_g_table = curve.g_table
+_pk_table = curve.pk_table
+_PK_TABLES = curve._PK_TABLES
+_rlc_coefficient = rlc_coefficient
 
 
 def _point_mul(k: int, p: Point) -> Point:
     """Scalar multiplication; routes G through the precomputed base-point
     window table, everything else through plain double-and-add."""
-    if p == (_GX, _GY):
-        return _point_mul_windowed(k, _g_table())
-    return _point_mul_naive(k, p)
-
-
-def _strauss_shamir(u1: int, p: Point, u2: int, q: Point) -> Point:
-    """Dual-scalar multiplication u1·P + u2·Q with shared doublings
-    (Strauss–Shamir): one pass over the joint bit length instead of two
-    independent double-and-add chains."""
-    pq = _point_add(p, q)
-    acc = _INF
-    for i in range(max(u1.bit_length(), u2.bit_length()) - 1, -1, -1):
-        acc = _point_add(acc, acc)
-        b1 = (u1 >> i) & 1
-        b2 = (u2 >> i) & 1
-        if b1 and b2:
-            acc = _point_add(acc, pq)
-        elif b1:
-            acc = _point_add(acc, p)
-        elif b2:
-            acc = _point_add(acc, q)
-    return acc
-
-
-def _multi_scalar(pairs: Sequence[Tuple[int, Point]]) -> Point:
-    """Σ kᵢ·Pᵢ with doublings shared across every term (the n-ary
-    Strauss–Shamir generalization). With 128-bit batch coefficients this
-    costs ~128 doublings total plus ~64 additions per point — versus a full
-    scalar multiplication per point done independently."""
-    pairs = [(k, p) for k, p in pairs if k and not _is_inf(p)]
-    if not pairs:
-        return _INF
-    acc = _INF
-    for i in range(max(k.bit_length() for k, _ in pairs) - 1, -1, -1):
-        acc = _point_add(acc, acc)
-        for k, p in pairs:
-            if (k >> i) & 1:
-                acc = _point_add(acc, p)
-    return acc
+    if p == curve.G:
+        return curve.point_mul_windowed(k, curve.g_table())
+    return curve.point_mul_naive(k, p)
 
 
 # ---------------------------------------------------------------------------
@@ -211,17 +108,38 @@ def _multi_scalar(pairs: Sequence[Tuple[int, Point]]) -> Point:
 #              ``verify_batch`` additionally folds a whole phase's tags into
 #              one randomized-linear-combination equation with bisection
 #              fallback for attribution.
+# "jax"      — ``batch`` semantics with the RLC equation evaluated by the
+#              limb-vectorized JAX kernel (``backends.jax``); requires jax.
 
-BACKENDS = ("naive", "windowed", "batch")
+BACKENDS = ("naive", "windowed", "batch", "jax")
 _BACKEND = "batch"
+_OPS: Dict[str, CurveOps] = {}
 
 
-def set_backend(name: str) -> None:
-    """Select the crypto backend (``"naive" | "windowed" | "batch"``)."""
-    global _BACKEND
+def _get_ops(name: str) -> CurveOps:
+    """The ``CurveOps`` instance for a backend name (constructed lazily —
+    the jax backend imports jax only when first requested)."""
     if name not in BACKENDS:
         raise ValueError(f"unknown crypto backend {name!r}; "
                          f"choose from {BACKENDS}")
+    ops = _OPS.get(name)
+    if ops is None:
+        if name == "jax":
+            from repro.core.crypto.backends.jax import JaxOps
+            ops = JaxOps()
+        else:
+            ops = {"naive": NaiveOps,
+                   "windowed": WindowedOps,
+                   "batch": BatchOps}[name]()
+        _OPS[name] = ops
+    return ops
+
+
+def set_backend(name: str) -> None:
+    """Select the crypto backend (``"naive" | "windowed" | "batch" |
+    "jax"``). Selecting ``"jax"`` on a jax-less install raises."""
+    global _BACKEND
+    _get_ops(name)          # validates the name and any gated dependency
     _BACKEND = name
 
 
@@ -270,16 +188,22 @@ def _bits2int(b: bytes) -> int:
     return i
 
 
-def _rfc6979_k(msg_hash: bytes, priv: int) -> int:
-    """Deterministic nonce per RFC 6979 (HMAC-SHA256 DRBG)."""
+def _rfc6979_k(msg_hash: bytes, priv: int, extra: bytes = b"") -> int:
+    """Deterministic nonce per RFC 6979 (HMAC-SHA256 DRBG).
+
+    ``extra`` is RFC 6979 §3.6 additional data k': mixed into both DRBG
+    seeding steps. ``dsign`` feeds a retry counter through it when a drawn
+    nonce yields r == 0 or s == 0, so retries re-randomize k while still
+    signing the *caller's* digest.
+    """
     holen = 32
     x = priv.to_bytes(32, "big")
     h1 = msg_hash
     v = b"\x01" * holen
     k = b"\x00" * holen
-    k = hmac.new(k, v + b"\x00" + x + h1, hashlib.sha256).digest()
+    k = hmac.new(k, v + b"\x00" + x + h1 + extra, hashlib.sha256).digest()
     v = hmac.new(k, v, hashlib.sha256).digest()
-    k = hmac.new(k, v + b"\x01" + x + h1, hashlib.sha256).digest()
+    k = hmac.new(k, v + b"\x01" + x + h1 + extra, hashlib.sha256).digest()
     v = hmac.new(k, v, hashlib.sha256).digest()
     while True:
         v = hmac.new(k, v, hashlib.sha256).digest()
@@ -302,7 +226,7 @@ class ECDSAKeyPair:
         if seed is None:
             seed = os.urandom(32)
         priv = (int.from_bytes(hashlib.sha256(seed).digest(), "big") % (_N - 1)) + 1
-        pub = _point_mul(priv, (_GX, _GY))
+        pub = _point_mul(priv, curve.G)
         return ECDSAKeyPair(priv, pub)
 
 
@@ -349,22 +273,26 @@ class Signature(NamedTuple):
 
 
 def dsign(digest: bytes, private_key: int) -> Signature:
-    """DSign(d, SK) → tag (Alg. 2 line 3)."""
+    """DSign(d, SK) → tag (Alg. 2 line 3).
+
+    The r == 0 / s == 0 retry (probability ~2^-256 per draw) re-seeds the
+    RFC-6979 DRBG with a retry counter and signs the *same* digest — the
+    returned tag always verifies against the digest the caller passed.
+    """
     z = _bits2int(digest)
-    naive = _BACKEND == "naive"
+    ops = _get_ops(_BACKEND)
+    retry = 0
     while True:
-        k = _rfc6979_k(digest, private_key)
-        if naive:
-            x, y = _point_mul_naive(k, (_GX, _GY))
-        else:
-            x, y = _point_mul_windowed(k, _g_table())
+        extra = b"" if retry == 0 else retry.to_bytes(4, "big")
+        k = _rfc6979_k(digest, private_key, extra=extra)
+        x, y = ops.mul_base(k)
         r = x % _N
         if r == 0:
-            digest = sha256_digest(digest)  # extremely unlikely; re-derive
+            retry += 1
             continue
         s = _inv_mod(k, _N) * (z + r * private_key) % _N
         if s == 0:
-            digest = sha256_digest(digest)
+            retry += 1
             continue
         v = y & 1
         if s > _N // 2:  # low-s normalization
@@ -390,11 +318,7 @@ def dverify(tag, public_key: Point, digest: bytes) -> bool:
     w = _inv_mod(s, _N)
     u1 = z * w % _N
     u2 = r * w % _N
-    if _BACKEND == "naive":
-        pt = _strauss_shamir(u1, (_GX, _GY), u2, public_key)
-    else:
-        pt = _point_add(_point_mul_windowed(u1, _g_table()),
-                        _point_mul_windowed(u2, _pk_table(public_key)))
+    pt = _get_ops(_BACKEND).linear_combo(u1, u2, public_key)
     if _is_inf(pt):
         return False
     return pt[0] % _N == r
@@ -419,40 +343,7 @@ class BatchVerifyResult(NamedTuple):
 def _recover_R(sig: Signature) -> Optional[Point]:
     """The nonce point R from (r, v). Returns None when no curve point has
     that x (a forged r) — the caller falls back to individual verification."""
-    x = sig.r + (_N if sig.v & 2 else 0)
-    if x >= _P:
-        return None
-    y2 = (pow(x, 3, _P) + 7) % _P
-    y = pow(y2, (_P + 1) // 4, _P)      # p ≡ 3 (mod 4)
-    if y * y % _P != y2:
-        return None
-    if (y & 1) != (sig.v & 1):
-        y = _P - y
-    return (x, y)
-
-
-def _rlc_coefficient() -> int:
-    """A fresh random 128-bit nonzero batch coefficient. 128 bits bound the
-    adversary's cancellation probability at 2^-128; fresh draws per equation
-    keep bisection sound against crafted forgery pairs."""
-    return int.from_bytes(os.urandom(16), "big") | 1
-
-
-def _batch_equation(group: Sequence[Tuple[int, int, Point, Point]]) -> bool:
-    """One randomized-linear-combination check over prepared items
-    ``(u1, u2, PK, R)``: accepts iff (Σaᵢu1ᵢ)G + Σ(aᵢu2ᵢ)PKᵢ − ΣaᵢRᵢ = ∞
-    (up to a 2^-128 false-accept bound)."""
-    coeffs = [_rlc_coefficient() for _ in group]
-    sg = 0
-    acc = _INF
-    r_terms: List[Tuple[int, Point]] = []
-    for a, (u1, u2, pk, R) in zip(coeffs, group):
-        sg = (sg + a * u1) % _N
-        acc = _point_add(acc, _point_mul_windowed(a * u2 % _N, _pk_table(pk)))
-        r_terms.append((a, (R[0], (-R[1]) % _P)))   # −R
-    acc = _point_add(acc, _point_mul_windowed(sg, _g_table()))
-    acc = _point_add(acc, _multi_scalar(r_terms))
-    return _is_inf(acc)
+    return curve.lift_x(sig.r + (_N if sig.v & 2 else 0), bool(sig.v & 1))
 
 
 def verify_batch(items: Sequence[BatchItem],
@@ -461,22 +352,21 @@ def verify_batch(items: Sequence[BatchItem],
 
     Under the ``naive``/``windowed`` backends this is a plain loop of
     :func:`dverify` calls (the per-message baseline, timed as such by the
-    benchmarks). Under ``batch`` (the default), identical triples are
-    deduplicated — one consensus round verifies each sender's tag at N−1
-    receivers, so a round-level batch collapses N×(N−1) checks to N — and
-    the distinct remainder is checked with one randomized-linear-combination
-    equation; on failure, bisection attributes the exact forged items.
+    benchmarks). Under ``batch``/``jax`` (equation-capable backends),
+    identical triples are deduplicated — one consensus round verifies each
+    sender's tag at N−1 receivers, so a round-level batch collapses
+    N×(N−1) checks to N — and the distinct remainder is checked with one
+    randomized-linear-combination equation (Jacobian Python or the JAX
+    limb kernel); on failure, bisection attributes the exact forged items.
 
     The acceptance predicate is identical across backends: an item passes
     iff ``dverify`` passes it individually.
     """
-    backend = backend if backend is not None else _BACKEND
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown crypto backend {backend!r}; "
-                         f"choose from {BACKENDS}")
+    name = backend if backend is not None else _BACKEND
+    ops = _get_ops(name)
     items = list(items)
-    if backend != "batch":
-        with use_backend(backend):
+    if not ops.batch_equation:
+        with use_backend(name):
             bad = tuple(i for i, (tag, pk, d) in enumerate(items)
                         if not dverify(tag, pk, d))
         return BatchVerifyResult(not bad, bad)
@@ -515,7 +405,7 @@ def verify_batch(items: Sequence[BatchItem],
         must still be accepted — the predicate is dverify's)."""
         if not group:
             return
-        if _batch_equation([prep for _, prep in group]):
+        if ops.rlc_check([prep for _, prep in group]):
             return
         if len(group) == 1:
             key = group[0][0]

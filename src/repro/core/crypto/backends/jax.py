@@ -1,0 +1,343 @@
+"""JAX limb-vectorized secp256k1 backend (``set_backend("jax")``).
+
+The round-level RLC batch equation
+
+    (Σ aᵢ·u1ᵢ)·G + Σ (aᵢ·u2ᵢ)·PKᵢ − Σ aᵢ·Rᵢ == ∞
+
+is evaluated as ONE jitted multi-scalar program over all N deduplicated
+signatures — the first time the blockchain control plane rides the same
+JAX substrate as the FEL engine. Representation:
+
+* a field element is 8 little-endian 32-bit limbs held in uint64 lanes,
+  shape ``(lanes, 8)`` — products of two limbs fit a uint64, and the 8×8
+  schoolbook columns accumulate lazily as split lo/hi halves (bounded by
+  2^36) before one carry propagation;
+* reduction mod p = 2^256 − 2^32 − 977 folds the high half as
+  H·(2^32 + 977) (two foldings + one conditional subtract; every field op
+  returns a fully reduced element);
+* points are Jacobian ``(X, Y, Z)`` limb triples; add/double are the same
+  inversion-free formulas as ``curve.py``. The mixed-add ladder step
+  deliberately omits the P == Q exceptional branch: for honest inputs the
+  accumulator collides with a table point with probability ~2^-250 under
+  the fresh random batch coefficients, a collision only *fails* the
+  equation (H = 0 zeroes Z3), and a failing equation falls back through
+  bisection to the Python ``dverify`` predicate — wrong-but-safe, never
+  falsely accepting;
+* each signature is one lane running a joint Strauss–Shamir ladder over
+  its per-lane table ``[∅, PK, −R, PK−R]``: 256 shared double steps, one
+  masked mixed add per step. The per-lane Jacobian accumulators are
+  folded on the host (≤ lanes big-int adds — not worth a device kernel).
+
+Lanes are padded to the next power of two, so jit recompiles once per
+size bucket (the same shape-bucketing contract as the batched FEL
+engine). Per-message operations (``dsign``/``dverify``) delegate to the
+windowed Python path — a single scalar multiplication has no lanes to
+vectorize over.
+
+Everything runs under ``jax.experimental.enable_x64`` scoped contexts:
+the global x64 flag stays off, so the FEL engine's float32 programs are
+untouched.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+try:  # gate: the crypto API must import fine on jax-less installs
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    from jax.experimental import enable_x64
+    HAS_JAX = True
+    _IMPORT_ERROR: Exception | None = None
+except Exception as e:  # pragma: no cover - exercised on jax-less installs
+    HAS_JAX = False
+    _IMPORT_ERROR = e
+
+from ..curve import (JPoint, Point, affine_point_add, g_table, is_inf,
+                     jc_add, jc_is_inf, point_mul_windowed_jc)
+from ..curve import N as _N
+from ..field import P as _P
+from .python import BatchOps, RLCItem, rlc_coefficient
+
+_LIMBS = 8
+_LBITS = 32
+_MASK32 = (1 << 32) - 1
+_FOLD = 977          # 2^256 ≡ 2^32 + 977 (mod p)
+
+_P_LIMBS_HOST = [(_P >> (_LBITS * i)) & _MASK32 for i in range(_LIMBS)]
+
+
+# ---------------------------------------------------------------------------
+# host <-> limb conversion
+# ---------------------------------------------------------------------------
+
+def to_limbs(x: int) -> np.ndarray:
+    return np.array([(x >> (_LBITS * i)) & _MASK32 for i in range(_LIMBS)],
+                    dtype=np.uint64)
+
+
+def from_limbs(arr) -> int:
+    out = 0
+    for i, limb in enumerate(np.asarray(arr, dtype=np.uint64).tolist()):
+        out |= int(limb) << (_LBITS * i)
+    return out
+
+
+def scalar_bits(k: int) -> np.ndarray:
+    """(256,) uint8, most-significant bit first."""
+    return np.unpackbits(
+        np.frombuffer((k % (1 << 256)).to_bytes(32, "big"), dtype=np.uint8))
+
+
+# ---------------------------------------------------------------------------
+# field arithmetic on (..., 8) uint64 limb arrays (fully reduced invariant)
+# ---------------------------------------------------------------------------
+# Carry/borrow chains unroll statically at trace time over Python lists of
+# per-limb lane arrays; everything else stays stacked.
+
+def _split(a) -> List:
+    return [a[..., i] for i in range(a.shape[-1])]
+
+
+def _join(limbs: List):
+    return jnp.stack(limbs, axis=-1)
+
+
+def _carry_chain(cols: List, n_out: int) -> Tuple[List, "jax.Array"]:
+    """Propagate carries over column sums (each < 2^37); returns ``n_out``
+    32-bit limbs plus the final carry."""
+    out = []
+    carry = jnp.zeros_like(cols[0])
+    for i in range(n_out):
+        v = (cols[i] if i < len(cols) else jnp.zeros_like(cols[0])) + carry
+        out.append(v & _MASK32)
+        carry = v >> _LBITS
+    return out, carry
+
+
+def _sub_chain(al: List, bl: List) -> Tuple[List, "jax.Array"]:
+    """Limbwise a − b with borrow propagation; borrow is 0/1."""
+    out = []
+    borrow = jnp.zeros_like(al[0])
+    for i in range(_LIMBS):
+        bi = bl[i] + borrow
+        out.append((al[i] - bi) & _MASK32)
+        borrow = (al[i] < bi).astype(al[0].dtype)
+    return out, borrow
+
+
+def _cond_sub_p(limbs: List, overflow) -> List:
+    """Subtract p iff ``limbs + overflow·2^256 >= p`` (value < 2p)."""
+    p = [jnp.full_like(limbs[0], _P_LIMBS_HOST[i]) for i in range(_LIMBS)]
+    d, borrow = _sub_chain(limbs, p)
+    need = ((overflow > 0) | (borrow == 0))
+    return [jnp.where(need, d[i], limbs[i]) for i in range(_LIMBS)]
+
+
+def _fold_overflow(limbs: List, overflow) -> Tuple[List, "jax.Array"]:
+    """Add ``overflow·(2^32 + 977)`` into the low limbs (2^256 ≡ that)."""
+    cols = list(limbs)
+    cols[0] = cols[0] + overflow * _FOLD
+    cols[1] = cols[1] + overflow
+    return _carry_chain(cols, _LIMBS)
+
+
+def ff_add(a, b):
+    limbs, carry = _carry_chain([x + y for x, y in zip(_split(a), _split(b))],
+                                _LIMBS)
+    return _join(_cond_sub_p(limbs, carry))
+
+
+def ff_sub(a, b):
+    d, borrow = _sub_chain(_split(a), _split(b))
+    cols = [d[i] + borrow * _P_LIMBS_HOST[i] for i in range(_LIMBS)]
+    limbs, _ = _carry_chain(cols, _LIMBS)   # carry-out cancels the borrow
+    return _join(limbs)
+
+
+def ff_small(a, m: int):
+    """a·m for a small constant m (2, 3, 4, 8): limbwise multiply + fold."""
+    limbs, carry = _carry_chain([x * m for x in _split(a)], _LIMBS)
+    limbs, carry = _fold_overflow(limbs, carry)          # carry < m
+    limbs, carry = _fold_overflow(limbs, carry)          # carry now 0/1
+    return _join(_cond_sub_p(limbs, carry))
+
+
+def ff_mul(a, b):
+    # 8×8 schoolbook with lazily-split columns: lo halves land in column
+    # i+j, hi halves in i+j+1; each column sums ≤ 16 values < 2^32.
+    prod = a[..., :, None] * b[..., None, :]             # (..., 8, 8)
+    lo = prod & _MASK32
+    hi = prod >> _LBITS
+    cols = jnp.zeros(a.shape[:-1] + (2 * _LIMBS,), dtype=a.dtype)
+    for i in range(_LIMBS):
+        cols = cols.at[..., i:i + _LIMBS].add(lo[..., i, :])
+        cols = cols.at[..., i + 1:i + 1 + _LIMBS].add(hi[..., i, :])
+    m, _ = _carry_chain(_split(cols), 2 * _LIMBS)        # < p² < 2^512
+    # fold the high half: v = L + H·(2^32 + 977)  (≤ 10 limbs)
+    lo8, hi8 = m[:_LIMBS], m[_LIMBS:]
+    cols2 = [jnp.zeros_like(lo8[0]) for _ in range(_LIMBS + 2)]
+    for i in range(_LIMBS):
+        cols2[i] = cols2[i] + lo8[i] + hi8[i] * _FOLD
+        cols2[i + 1] = cols2[i + 1] + hi8[i]
+    v, _ = _carry_chain(cols2, _LIMBS + 2)
+    top = v[_LIMBS] + (v[_LIMBS + 1] << _LBITS)          # value >> 256, < 2^33
+    limbs, carry = _fold_overflow(v[:_LIMBS], top)
+    limbs, carry = _fold_overflow(limbs, carry)
+    return _join(_cond_sub_p(limbs, carry))
+
+
+def ff_sqr(a):
+    return ff_mul(a, a)
+
+
+def ff_is_zero(a):
+    return jnp.all(a == 0, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Jacobian point ops on limb lanes
+# ---------------------------------------------------------------------------
+
+def _sel(mask, a, b):
+    """Lane-masked select over limb arrays (mask shape (...,))."""
+    return jnp.where(mask[..., None], a, b)
+
+
+def jc_double_v(X, Y, Z):
+    """dbl-2009-l (a = 0); an infinity lane (Z = 0) stays at infinity."""
+    A_ = ff_sqr(X)
+    B_ = ff_sqr(Y)
+    C = ff_sqr(B_)
+    D = ff_small(ff_sub(ff_sub(ff_sqr(ff_add(X, B_)), A_), C), 2)
+    E = ff_small(A_, 3)
+    X3 = ff_sub(ff_sqr(E), ff_small(D, 2))
+    Y3 = ff_sub(ff_mul(E, ff_sub(D, X3)), ff_small(C, 8))
+    Z3 = ff_small(ff_mul(Y, Z), 2)
+    return X3, Y3, Z3
+
+
+def jc_add_mixed_v(X1, Y1, Z1, x2, y2, use):
+    """Per-lane P + (x2, y2) (madd-2007-bl); ``use`` masks lanes that add.
+
+    Handles P at infinity and P == −Q (H = 0 zeroes Z3). The P == Q case
+    also lands on Z3 = 0 — *wrong* (it should double) but safe: the sum
+    stops matching, the equation fails, and bisection's dverify leaves
+    decide. See the module docstring for why that trade is sound.
+    """
+    Z1Z1 = ff_sqr(Z1)
+    U2 = ff_mul(x2, Z1Z1)
+    S2 = ff_mul(y2, ff_mul(Z1, Z1Z1))
+    H = ff_sub(U2, X1)
+    r = ff_small(ff_sub(S2, Y1), 2)
+    HH = ff_sqr(H)
+    I = ff_small(HH, 4)
+    J = ff_mul(H, I)
+    V = ff_mul(X1, I)
+    X3 = ff_sub(ff_sub(ff_sqr(r), J), ff_small(V, 2))
+    Y3 = ff_sub(ff_mul(r, ff_sub(V, X3)), ff_small(ff_mul(Y1, J), 2))
+    Z3 = ff_sub(ff_sub(ff_sqr(ff_add(Z1, H)), Z1Z1), HH)
+    p_inf = ff_is_zero(Z1)
+    one = jnp.zeros_like(X1).at[..., 0].set(1)
+    X3 = _sel(p_inf, x2, X3)
+    Y3 = _sel(p_inf, y2, Y3)
+    Z3 = _sel(p_inf, one, Z3)
+    keep = ~use
+    return (_sel(keep, X1, X3), _sel(keep, Y1, Y3), _sel(keep, Z1, Z3))
+
+
+# ---------------------------------------------------------------------------
+# the batch-equation kernel
+# ---------------------------------------------------------------------------
+
+def _rlc_kernel(step_x, step_y, step_use):
+    """Joint Strauss–Shamir ladder over every lane.
+
+    The per-step addends are pre-gathered on the host (digit lookup into
+    each lane's [∅, PK, −R, PK−R] table is cheap numpy fancy indexing, and
+    hoisting it out of the loop body keeps the compiled step pure limb
+    arithmetic):
+
+    step_x/step_y: (256, L, 8) uint64 — MSB-first ladder addends;
+    step_use:      (256, L) bool — False steps add nothing.
+    Returns per-lane Jacobian (X, Y, Z) limbs; the host folds the lanes.
+    """
+    L = step_x.shape[1]
+    zeros = jnp.zeros((L, _LIMBS), dtype=step_x.dtype)
+    one = zeros.at[:, 0].set(1)
+    state = (one, one, zeros)           # all lanes start at infinity
+
+    def body(j, state):
+        X, Y, Z = jc_double_v(*state)
+        return jc_add_mixed_v(X, Y, Z, step_x[j], step_y[j], step_use[j])
+
+    return lax.fori_loop(0, step_x.shape[0], body, state)
+
+
+_rlc_kernel_jit = None
+
+
+def _kernel():
+    global _rlc_kernel_jit
+    if _rlc_kernel_jit is None:
+        _rlc_kernel_jit = jax.jit(_rlc_kernel)
+    return _rlc_kernel_jit
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+class JaxOps(BatchOps):
+    """``batch`` semantics with the RLC equation on the JAX limb kernel."""
+
+    name = "jax"
+    batch_equation = True
+    #: below this lane count the ladder cannot amortize kernel dispatch —
+    #: the Python Jacobian equation wins (bisection leaves land here)
+    min_lanes = 2
+
+    def __init__(self):
+        if not HAS_JAX:
+            raise RuntimeError(
+                "crypto backend 'jax' requires jax, which failed to "
+                f"import: {_IMPORT_ERROR!r}")
+
+    def rlc_check(self, group: Sequence[RLCItem]) -> bool:
+        if len(group) < self.min_lanes:
+            return super().rlc_check(group)
+        coeffs = [rlc_coefficient() for _ in group]
+        sg = 0
+        L = _next_pow2(len(group))
+        tx = np.zeros((L, 4, _LIMBS), dtype=np.uint64)
+        ty = np.zeros((L, 4, _LIMBS), dtype=np.uint64)
+        use = np.zeros((L, 4), dtype=bool)
+        digits = np.zeros((256, L), dtype=np.int64)
+        for lane, (a, (u1, u2, pk, R)) in enumerate(zip(coeffs, group)):
+            sg = (sg + a * u1) % _N
+            neg_r = (R[0], (-R[1]) % _P)
+            pk_minus_r = affine_point_add(pk, neg_r)
+            for slot, pt in ((1, pk), (2, neg_r), (3, pk_minus_r)):
+                if not is_inf(pt):
+                    tx[lane, slot] = to_limbs(pt[0])
+                    ty[lane, slot] = to_limbs(pt[1])
+                    use[lane, slot] = True
+            digits[:, lane] = (scalar_bits(a * u2 % _N)
+                               + 2 * scalar_bits(a))
+        lanes = np.arange(L)
+        step_x = tx[lanes[None, :], digits]           # (256, L, 8)
+        step_y = ty[lanes[None, :], digits]
+        step_use = use[lanes[None, :], digits]
+        with enable_x64():
+            X, Y, Z = _kernel()(jnp.asarray(step_x), jnp.asarray(step_y),
+                                jnp.asarray(step_use))
+            X, Y, Z = np.asarray(X), np.asarray(Y), np.asarray(Z)
+        # fold the per-lane accumulators + the shared G term on the host
+        acc: JPoint = point_mul_windowed_jc(sg, g_table())
+        for lane in range(len(group)):
+            acc = jc_add(acc, (from_limbs(X[lane]), from_limbs(Y[lane]),
+                               from_limbs(Z[lane])))
+        return jc_is_inf(acc)

@@ -1,0 +1,110 @@
+"""Pure-Python curve backends behind the ``CurveOps`` seam.
+
+``repro.core.crypto`` routes every scalar-multiplication decision through
+one of these objects (selected by ``set_backend``):
+
+* :class:`NaiveOps`    — double-and-add, no tables: the algorithmic
+  baseline the benchmarks measure everything against.
+* :class:`WindowedOps` — 4-bit fixed-window tables (base point
+  precomputed, public keys cached FIFO): the per-message fast path.
+* :class:`BatchOps`    — per-message behaviour identical to windowed,
+  plus the round-level randomized-linear-combination equation
+  (:meth:`rlc_check`) that ``verify_batch`` folds a whole phase's
+  signatures through.
+
+All three accumulate in Jacobian coordinates (``curve.py``): a point add
+costs mulmods instead of a modular inversion, and the RLC equation needs
+*zero* inversions — "is the sum infinity" is just Z == 0.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import List, Sequence, Tuple
+
+from ..curve import (G, J_INF, Point, g_table, jc_add, jc_is_inf,
+                     jc_to_affine, multi_scalar_jc, pk_table,
+                     point_mul_naive, point_mul_windowed,
+                     point_mul_windowed_jc, strauss_shamir)
+from ..curve import N as _N
+from ..field import P as _P
+
+# (u1, u2, PK, R): one prepared signature of the batch equation
+#     (Σ aᵢ·u1ᵢ)·G + Σ (aᵢ·u2ᵢ)·PKᵢ − Σ aᵢ·Rᵢ == ∞
+RLCItem = Tuple[int, int, Point, Point]
+
+
+def rlc_coefficient() -> int:
+    """A fresh random 128-bit nonzero batch coefficient. 128 bits bound the
+    adversary's cancellation probability at 2^-128; fresh draws per equation
+    keep bisection sound against crafted forgery pairs."""
+    return int.from_bytes(os.urandom(16), "big") | 1
+
+
+class CurveOps:
+    """Backend seam: the three point-arithmetic decisions ECDSA makes."""
+
+    name = "base"
+    #: True when ``verify_batch`` should fold batches through rlc_check
+    #: instead of looping dverify
+    batch_equation = False
+
+    def mul_base(self, k: int) -> Point:
+        """k·G — the signing-side multiplication."""
+        raise NotImplementedError
+
+    def linear_combo(self, u1: int, u2: int, pk: Point) -> Point:
+        """u1·G + u2·PK — the single-signature verification equation."""
+        raise NotImplementedError
+
+    def rlc_check(self, group: Sequence[RLCItem]) -> bool:
+        """One randomized-linear-combination equation over prepared items
+        (accept up to the 2^-128 false-accept bound)."""
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"<{type(self).__name__} name={self.name!r}>"
+
+
+class NaiveOps(CurveOps):
+    name = "naive"
+
+    def mul_base(self, k: int) -> Point:
+        return point_mul_naive(k, G)
+
+    def linear_combo(self, u1: int, u2: int, pk: Point) -> Point:
+        return strauss_shamir(u1, G, u2, pk)
+
+
+class WindowedOps(CurveOps):
+    name = "windowed"
+
+    def mul_base(self, k: int) -> Point:
+        return point_mul_windowed(k, g_table())
+
+    def linear_combo(self, u1: int, u2: int, pk: Point) -> Point:
+        acc = jc_add(point_mul_windowed_jc(u1, g_table()),
+                     point_mul_windowed_jc(u2, pk_table(pk)))
+        return jc_to_affine(acc)
+
+
+class BatchOps(WindowedOps):
+    name = "batch"
+    batch_equation = True
+
+    def rlc_check(self, group: Sequence[RLCItem]) -> bool:
+        coeffs = [rlc_coefficient() for _ in group]
+        sg = 0
+        acc = J_INF
+        r_terms: List[Tuple[int, Point]] = []
+        for a, (u1, u2, pk, R) in zip(coeffs, group):
+            sg = (sg + a * u1) % _N
+            # per-PK windowed tables: zero doublings, ≤64 mixed adds each
+            acc = jc_add(acc, point_mul_windowed_jc(a * u2 % _N,
+                                                    pk_table(pk)))
+            r_terms.append((a, (R[0], (-R[1]) % _P)))   # −R
+        acc = jc_add(acc, point_mul_windowed_jc(sg, g_table()))
+        # the table-less −R terms share one doubling chain (128 doublings
+        # for 128-bit coefficients, regardless of batch size)
+        acc = jc_add(acc, multi_scalar_jc(r_terms))
+        return jc_is_inf(acc)

@@ -1,0 +1,365 @@
+"""secp256k1 point arithmetic — Jacobian-first, with affine legacy ops.
+
+The hot inner loop of every PoFEL round's signature work is point
+addition. An affine add pays a full modular inversion for the slope
+(~40× the cost of a mulmod on this interpreter); a Jacobian add/double is
+inversion-free, so every multi-point evaluation in this module
+accumulates in Jacobian coordinates ``(X, Y, Z)`` (affine x = X/Z²,
+y = Y/Z³; Z = 0 is the point at infinity) and defers normalization to a
+single final inversion — or none at all for the batch equation, whose
+only question is "is the sum the point at infinity?" (Z == 0).
+
+Window tables keep *affine* entries (mixed addition Jacobian+affine is
+the cheapest add form); building a table runs in Jacobian and then
+normalizes all 64×15 entries with one :func:`field.batch_inv` call.
+
+The ``affine_*`` functions preserve the pre-Jacobian implementation:
+``benchmarks/bench_hcds.py`` times them as the PR-4 baseline the
+Jacobian/JAX backends are measured against, and the host-side backends
+use :func:`affine_point_add` for one-off sums where clarity beats speed.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import List, Optional, Sequence, Tuple
+
+from .field import P as _P
+from .field import batch_inv, inv_mod, sqrt_mod_p
+
+# ---------------------------------------------------------------------------
+# secp256k1 curve parameters (SEC 2, v2.0): y² = x³ + 7 over F_P
+# ---------------------------------------------------------------------------
+N = 0xFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFFEBAAEDCE6AF48A03BBFD25E8CD0364141
+GX = 0x79BE667EF9DCBBAC55A06295CE870B07029BFCDB2DCE28D959F2815B16F81798
+GY = 0x483ADA7726A3C4655DA4FBFC0E1108A8FD17B448A68554199C47D08FFB10D4B8
+A = 0
+B = 7
+G: "Point" = (GX, GY)
+
+Point = Tuple[int, int]
+INF: Point = (0, 0)  # affine point-at-infinity sentinel ((0,0) is off-curve)
+
+JPoint = Tuple[int, int, int]
+J_INF: JPoint = (1, 1, 0)
+
+
+def is_inf(p: Point) -> bool:
+    return p[0] == 0 and p[1] == 0
+
+
+def on_curve(p: Point) -> bool:
+    if is_inf(p):
+        return False
+    x, y = p
+    return (y * y - (x * x * x + B)) % _P == 0
+
+
+# ---------------------------------------------------------------------------
+# Affine arithmetic (legacy/baseline + host-side one-offs)
+# ---------------------------------------------------------------------------
+
+def affine_point_add(p: Point, q: Point) -> Point:
+    if is_inf(p):
+        return q
+    if is_inf(q):
+        return p
+    if p[0] == q[0] and (p[1] + q[1]) % _P == 0:
+        return INF
+    if p == q:
+        lam = (3 * p[0] * p[0] + A) * inv_mod(2 * p[1], _P) % _P
+    else:
+        lam = (q[1] - p[1]) * inv_mod(q[0] - p[0], _P) % _P
+    x = (lam * lam - p[0] - q[0]) % _P
+    y = (lam * (p[0] - x) - p[1]) % _P
+    return (x, y)
+
+
+def affine_point_neg(p: Point) -> Point:
+    if is_inf(p):
+        return p
+    return (p[0], (-p[1]) % _P)
+
+
+def affine_point_mul_windowed(k: int, table: "WindowTable") -> Point:
+    """PR-4's windowed evaluation — one affine add (one inversion) per
+    nonzero 4-bit digit. Kept as the measured baseline for the Jacobian
+    rework; live code paths use :func:`point_mul_windowed`."""
+    acc = INF
+    w = 0
+    while k:
+        d = k & _WINDOW_MASK
+        if d:
+            acc = affine_point_add(acc, table[w][d - 1])
+        k >>= _WINDOW_BITS
+        w += 1
+    return acc
+
+
+def affine_multi_scalar(pairs: Sequence[Tuple[int, Point]]) -> Point:
+    """PR-4's shared-doubling Σ kᵢ·Pᵢ, affine adds throughout (baseline)."""
+    pairs = [(k, p) for k, p in pairs if k and not is_inf(p)]
+    if not pairs:
+        return INF
+    acc = INF
+    for i in range(max(k.bit_length() for k, _ in pairs) - 1, -1, -1):
+        acc = affine_point_add(acc, acc)
+        for k, p in pairs:
+            if (k >> i) & 1:
+                acc = affine_point_add(acc, p)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Jacobian arithmetic — the live representation for every multi-op chain
+# ---------------------------------------------------------------------------
+
+def jc_is_inf(p: JPoint) -> bool:
+    return p[2] == 0
+
+
+def jc_from_affine(p: Point) -> JPoint:
+    if is_inf(p):
+        return J_INF
+    return (p[0], p[1], 1)
+
+
+def jc_to_affine(p: JPoint) -> Point:
+    if p[2] == 0:
+        return INF
+    zi = inv_mod(p[2], _P)
+    zi2 = zi * zi % _P
+    return (p[0] * zi2 % _P, p[1] * zi2 * zi % _P)
+
+
+def jc_double(p: JPoint) -> JPoint:
+    """dbl-2009-l (a = 0): 2M + 5S, no inversion."""
+    X1, Y1, Z1 = p
+    if Z1 == 0:
+        return p
+    A_ = X1 * X1 % _P
+    B_ = Y1 * Y1 % _P
+    C = B_ * B_ % _P
+    t = X1 + B_
+    D = 2 * (t * t - A_ - C) % _P
+    E = 3 * A_ % _P
+    F = E * E % _P
+    X3 = (F - 2 * D) % _P
+    Y3 = (E * (D - X3) - 8 * C) % _P
+    Z3 = 2 * Y1 * Z1 % _P
+    return (X3, Y3, Z3)
+
+
+def jc_add_mixed(p: JPoint, q: Point) -> JPoint:
+    """madd-2007-bl — Jacobian + affine mixed addition: 8M + 3S."""
+    if is_inf(q):
+        return p
+    X1, Y1, Z1 = p
+    if Z1 == 0:
+        return (q[0], q[1], 1)
+    Z1Z1 = Z1 * Z1 % _P
+    U2 = q[0] * Z1Z1 % _P
+    S2 = q[1] * Z1 * Z1Z1 % _P
+    if U2 == X1:
+        if S2 == Y1:
+            return jc_double(p)
+        return J_INF
+    H = (U2 - X1) % _P
+    HH = H * H % _P
+    I = 4 * HH % _P
+    J = H * I % _P
+    r = 2 * (S2 - Y1) % _P
+    V = X1 * I % _P
+    X3 = (r * r - J - 2 * V) % _P
+    Y3 = (r * (V - X3) - 2 * Y1 * J) % _P
+    t = Z1 + H
+    Z3 = (t * t - Z1Z1 - HH) % _P
+    return (X3, Y3, Z3)
+
+
+def jc_add(p: JPoint, q: JPoint) -> JPoint:
+    """add-2007-bl — general Jacobian addition: 11M + 5S."""
+    if p[2] == 0:
+        return q
+    if q[2] == 0:
+        return p
+    X1, Y1, Z1 = p
+    X2, Y2, Z2 = q
+    Z1Z1 = Z1 * Z1 % _P
+    Z2Z2 = Z2 * Z2 % _P
+    U1 = X1 * Z2Z2 % _P
+    U2 = X2 * Z1Z1 % _P
+    S1 = Y1 * Z2 * Z2Z2 % _P
+    S2 = Y2 * Z1 * Z1Z1 % _P
+    if U1 == U2:
+        if S1 == S2:
+            return jc_double(p)
+        return J_INF
+    H = (U2 - U1) % _P
+    I = 4 * H * H % _P
+    J = H * I % _P
+    r = 2 * (S2 - S1) % _P
+    V = U1 * I % _P
+    X3 = (r * r - J - 2 * V) % _P
+    Y3 = (r * (V - X3) - 2 * S1 * J) % _P
+    t = Z1 + Z2
+    Z3 = (t * t - Z1Z1 - Z2Z2) % _P * H % _P
+    return (X3, Y3, Z3)
+
+
+# ---------------------------------------------------------------------------
+# Scalar multiplication
+# ---------------------------------------------------------------------------
+
+def point_mul_naive(k: int, p: Point) -> Point:
+    """Double-and-add (the algorithmic baseline backend), accumulated in
+    Jacobian with a single final inversion. Constant-time not required in
+    this research framework; keys only sign benchmark/e2e traffic."""
+    acc = J_INF
+    addend = jc_from_affine(p)
+    while k:
+        if k & 1:
+            acc = jc_add(acc, addend)
+        addend = jc_double(addend)
+        k >>= 1
+    return jc_to_affine(acc)
+
+
+# -- windowed scalar multiplication -----------------------------------------
+# A 4-bit fixed-window table over a point Q holds d * (16^w * Q) for every
+# window position w and digit d, turning a 256-bit multiply into ≤ 64 point
+# additions with zero doublings at evaluation time. Entries are affine so
+# evaluation uses the cheapest (mixed) addition; the build itself runs in
+# Jacobian and batch-normalizes every entry with ONE inversion.
+
+_WINDOW_BITS = 4
+_WINDOW_MASK = (1 << _WINDOW_BITS) - 1
+_N_WINDOWS = (256 + _WINDOW_BITS - 1) // _WINDOW_BITS
+
+WindowTable = Tuple[Tuple[Point, ...], ...]
+
+
+def build_window_table(p: Point) -> WindowTable:
+    if is_inf(p):
+        raise ValueError("cannot build a window table for the point at "
+                         "infinity")
+    jrows: List[List[JPoint]] = []
+    base = jc_from_affine(p)
+    for _ in range(_N_WINDOWS):
+        row = [base]
+        for _ in range(_WINDOW_MASK - 1):
+            row.append(jc_add(row[-1], base))   # row[d-1] = d * base
+        jrows.append(row)
+        for _ in range(_WINDOW_BITS):
+            base = jc_double(base)
+    # one inversion normalizes all 64×15 entries (p has prime order, so no
+    # intermediate multiple of a valid input is the point at infinity)
+    flat = [pt for row in jrows for pt in row]
+    zinv = batch_inv([pt[2] for pt in flat])
+    table: List[Tuple[Point, ...]] = []
+    it = iter(zip(flat, zinv))
+    for row in jrows:
+        entries = []
+        for _ in row:
+            (X, Y, _Z), zi = next(it)
+            zi2 = zi * zi % _P
+            entries.append((X * zi2 % _P, Y * zi2 * zi % _P))
+        table.append(tuple(entries))
+    return tuple(table)
+
+
+def point_mul_windowed_jc(k: int, table: WindowTable) -> JPoint:
+    acc = J_INF
+    w = 0
+    while k:
+        d = k & _WINDOW_MASK
+        if d:
+            acc = jc_add_mixed(acc, table[w][d - 1])
+        k >>= _WINDOW_BITS
+        w += 1
+    return acc
+
+
+def point_mul_windowed(k: int, table: WindowTable) -> Point:
+    return jc_to_affine(point_mul_windowed_jc(k, table))
+
+
+def strauss_shamir(u1: int, p: Point, u2: int, q: Point) -> Point:
+    """Dual-scalar u1·P + u2·Q with shared doublings (Strauss–Shamir):
+    one Jacobian pass over the joint bit length, one final inversion."""
+    pq = affine_point_add(p, q)
+    acc = J_INF
+    for i in range(max(u1.bit_length(), u2.bit_length()) - 1, -1, -1):
+        acc = jc_double(acc)
+        b1 = (u1 >> i) & 1
+        b2 = (u2 >> i) & 1
+        if b1 and b2:
+            acc = jc_add_mixed(acc, pq)
+        elif b1:
+            acc = jc_add_mixed(acc, p)
+        elif b2:
+            acc = jc_add_mixed(acc, q)
+    return jc_to_affine(acc)
+
+
+def multi_scalar_jc(pairs: Sequence[Tuple[int, Point]]) -> JPoint:
+    """Σ kᵢ·Pᵢ with doublings shared across every term (n-ary
+    Strauss–Shamir), Jacobian throughout — zero inversions."""
+    pairs = [(k, p) for k, p in pairs if k and not is_inf(p)]
+    if not pairs:
+        return J_INF
+    acc = J_INF
+    for i in range(max(k.bit_length() for k, _ in pairs) - 1, -1, -1):
+        acc = jc_double(acc)
+        for k, p in pairs:
+            if (k >> i) & 1:
+                acc = jc_add_mixed(acc, p)
+    return acc
+
+
+def multi_scalar(pairs: Sequence[Tuple[int, Point]]) -> Point:
+    return jc_to_affine(multi_scalar_jc(pairs))
+
+
+# ---------------------------------------------------------------------------
+# Precomputed tables: the base point once, public keys cached FIFO
+# ---------------------------------------------------------------------------
+
+_G_TABLE: Optional[WindowTable] = None
+# public-key tables, keyed by the (x, y) point; bounded FIFO cache
+_PK_TABLES: "OrderedDict[Point, WindowTable]" = OrderedDict()
+_PK_CACHE_MAX = 256
+
+
+def g_table() -> WindowTable:
+    global _G_TABLE
+    if _G_TABLE is None:
+        _G_TABLE = build_window_table(G)
+    return _G_TABLE
+
+
+def pk_table(pk: Point) -> WindowTable:
+    """Cached window table for a public key — ``dverify`` against the same
+    key is O(N) per consensus round, so the one-time precompute amortizes
+    within a single HCDS exchange."""
+    table = _PK_TABLES.get(pk)
+    if table is None:
+        table = build_window_table(pk)
+        _PK_TABLES[pk] = table
+        if len(_PK_TABLES) > _PK_CACHE_MAX:
+            _PK_TABLES.popitem(last=False)
+    return table
+
+
+def lift_x(x: int, odd_y: bool) -> Optional[Point]:
+    """The curve point with this x and y-parity, or None when no point has
+    that x (used to recover nonce points R from compact signatures)."""
+    if x >= _P:
+        return None
+    y2 = (pow(x, 3, _P) + B) % _P
+    y = sqrt_mod_p(y2)
+    if y * y % _P != y2:
+        return None
+    if (y & 1) != (1 if odd_y else 0):
+        y = _P - y
+    return (x, y)

@@ -74,6 +74,11 @@ class Reveal:
 class HCDSResult:
     accepted: bool
     reason: str = "ok"
+    # set when accepting this reveal retroactively rejected another node's
+    # already-recorded reveal (plagiarism tie-break: the commitment stage
+    # fixes precedence, so a copy that merely *arrived* first is evicted
+    # once the earlier committer's reveal shows up)
+    evicted: Optional[int] = None
 
 
 class HCDSNode:
@@ -95,6 +100,12 @@ class HCDSNode:
         self._commits: Dict[int, Dict[int, Commitment]] = {}
         self._reveals: Dict[int, Dict[int, Reveal]] = {}
         self._own: Dict[int, tuple[bytes, bytes]] = {}  # round -> (nonce, model_bytes)
+        # round -> node_id -> commitment record index. Precedence between
+        # identical reveals is decided by this order (§4.1: the commitment
+        # stage, not reveal arrival, fixes who owns a model). Drivers call
+        # :meth:`finalize_commit_stage` at the commit/reveal barrier to
+        # canonicalize it, so every receiver holds the same order.
+        self._commit_order: Dict[int, Dict[int, int]] = {}
 
     # -- commit stage -----------------------------------------------------
     def commit(self, model: Any, round: int,
@@ -129,8 +140,35 @@ class HCDSNode:
         for other_id, other in per_round.items():
             if other_id != c.node_id and other.digest == c.digest:
                 return HCDSResult(False, "duplicate-digest")
+        order = self._commit_order.setdefault(c.round, {})
+        if c.node_id not in order:
+            order[c.node_id] = len(order)
         per_round[c.node_id] = c
         return HCDSResult(True)
+
+    def finalize_commit_stage(self, round: int,
+                              precedence: Optional[List[int]] = None) -> None:
+        """Fix commitment precedence at the commit/reveal barrier.
+
+        Alg. 2 makes the commit stage a barrier: reveals are only
+        processed once the phase's commits are all in hand, so the record
+        order can be canonicalized — every receiver (including each node
+        looking at its *own* early self-recorded commit) must resolve
+        identical-reveal ties identically.
+
+        ``precedence`` is the commit transactions' chain-inclusion order
+        when the driver has one (networked mode: the bus's network-wide
+        first-delivery order — a copier that could only construct its
+        commitment after observing the victim's bytes broadcasts late and
+        lands behind the owner). Without one (the ideal synchronous
+        world, where every commit is simultaneous) ascending committer id
+        is the convention. Committers absent from ``precedence`` rank
+        last, in id order.
+        """
+        held = self._commits.get(round, {})
+        ranked = [nid for nid in (precedence or []) if nid in held]
+        ranked += [nid for nid in sorted(held) if nid not in ranked]
+        self._commit_order[round] = {nid: i for i, nid in enumerate(ranked)}
 
     # -- reveal stage ------------------------------------------------------
     def reveal(self, round: int) -> Reveal:
@@ -163,12 +201,28 @@ class HCDSNode:
                 r.tag, sender_pk,
                 commit_signing_digest(r.round, r.node_id, digest)):
             return HCDSResult(False, "bad-signature")
-        # plagiarism check: identical model bytes revealed by another node
-        for other_id, other in self._reveals.get(r.round, {}).items():
-            if other_id != r.node_id and other.model_bytes == r.model_bytes:
+        # plagiarism check: identical model bytes revealed by another node.
+        # Precedence belongs to the commitment stage (§4.1): the earlier
+        # *committer* of the pair owns the bytes, no matter whose reveal
+        # happened to arrive first — jittered delivery must not make
+        # receivers disagree about who the plagiarist is, or brand the
+        # honest victim.
+        order = self._commit_order.get(r.round, {})
+        reveals = self._reveals.setdefault(r.round, {})
+        evicted: Optional[int] = None
+        for other_id, other in list(reveals.items()):
+            if other_id == r.node_id or other.model_bytes != r.model_bytes:
+                continue
+            if order.get(other_id, -1) <= order.get(r.node_id, 1 << 30):
+                # the other node committed first: the incoming reveal is
+                # the copy
                 return HCDSResult(False, "plagiarized-model")
-        self._reveals.setdefault(r.round, {})[r.node_id] = r
-        return HCDSResult(True)
+            # the incoming reveal belongs to the earlier committer — the
+            # already-recorded copy is retroactively the plagiarized one
+            del reveals[other_id]
+            evicted = other_id
+        reveals[r.node_id] = r
+        return HCDSResult(True, evicted=evicted)
 
     def accepted_models(self, round: int) -> Dict[int, bytes]:
         """Model bytes of every node whose reveal passed all checks."""
@@ -207,6 +261,8 @@ def run_hcds_round(nodes: list[HCDSNode], models: list[Any], round: int,
                 if not res.accepted:
                     raise RuntimeError(
                         f"honest commit rejected: {c.node_id}->{n.node_id}: {res.reason}")
+    for n in nodes:                     # the commit/reveal barrier (Alg. 2)
+        n.finalize_commit_stage(round)
     reveals = [n.reveal(round) for n in nodes]
     digests = {r.node_id: crypto.sha256_digest(r.nonce, r.model_bytes)
                for r in reveals}

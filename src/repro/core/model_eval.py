@@ -64,8 +64,11 @@ def cosine_similarities(W: jax.Array, gw: jax.Array, eps: float = 1e-12) -> jax.
 def make_predictions(vote: jax.Array, n: int, g_max: float = 0.99) -> jax.Array:
     """Alg. 3 lines 6-12 — G_max on the voted index, G_min elsewhere.
 
-    G_min = (1 - G_max)/(N - 1) so that Σ_j p_j = 1 (paper §7.4).
+    G_min = (1 - G_max)/(N - 1) so that Σ_j p_j = 1 (paper §7.4); a
+    single-node network has no "rest", so the row is one-hot.
     """
+    if n == 1:
+        return jnp.ones((1,))
     g_min = (1.0 - g_max) / (n - 1)
     return jnp.full((n,), g_min).at[vote].set(g_max)
 

@@ -45,7 +45,8 @@ from repro.core import crypto
 from repro.core.btsv import BTSVResult
 from repro.core.envelope import commit_signing_digest, verify_envelopes
 from repro.core.hcds import HCDSNode, run_hcds_round
-from repro.core.model_eval import MEResult, model_evaluation_pytrees
+from repro.core.model_eval import (MEResult, make_predictions,
+                                   model_evaluation_pytrees)
 from repro.core.serialization import serialize_pytree
 
 # (node_id, honest_vote, honest_predictions) -> (vote, predictions)
@@ -57,6 +58,14 @@ PhaseHook = Callable[[str, "RoundContext"], None]
 class QuorumNotReached(RuntimeError):
     """A networked phase timed out below its quorum — the round cannot
     complete (liveness gap). The driver should skip to the next round."""
+
+
+def honest_predictions(n: int, vote: int, g_max: float) -> np.ndarray:
+    """An honest voter's prediction row, as a writable numpy array for the
+    host-side vote path. Delegates to :func:`model_eval.make_predictions`
+    so the G_max/G_min rule — including its n == 1 one-hot degenerate
+    case — has exactly one implementation."""
+    return np.array(make_predictions(vote, n, g_max=g_max), np.float32)
 
 
 @dataclass
@@ -153,6 +162,10 @@ class CommitReveal(ConsensusPhase):
             for sender, res in senders.items():
                 if not res.accepted and sender not in ctx.rejected:
                     ctx.rejected[sender] = res.reason
+                if res.evicted is not None:
+                    # the plagiarism tie-break retroactively rejected an
+                    # earlier-arrived copy from a later committer
+                    ctx.rejected.setdefault(res.evicted, "plagiarized-model")
 
     def _run_networked(self, ctx: RoundContext,
                        model_bytes: List[bytes]) -> None:
@@ -179,12 +192,26 @@ class CommitReveal(ConsensusPhase):
             ctx.rejected[i] = "forged-envelope"
             env.note("envelope_rejected", kind="commit", round=ctx.round,
                      node=i)
-        for recv, msgs in env.exchange("commit", ctx.round, commits).items():
-            for sender, c in msgs.items():
+        deliveries = env.exchange("commit", ctx.round, commits)
+        for recv, msgs in deliveries.items():
+            # record in ascending sender id: the commit phase is a barrier
+            # (all of a receiver's commits are in hand at the deadline), so
+            # processing order is canonical, not arrival-jittered
+            for sender in sorted(msgs):
                 if sender in forged_commits:
                     continue        # every receiver rejects the forged tag
-                self.nodes[recv].receive_commit(c, self.public_keys[sender],
+                self.nodes[recv].receive_commit(msgs[sender],
+                                                self.public_keys[sender],
                                                 verified=True)
+        # the commit/reveal barrier: commitment precedence is the commit
+        # transactions' chain-inclusion order (network-wide first delivery
+        # on the bus), shared by every node — so plagiarism ties resolve
+        # identically everywhere, and a copier that had to *observe* the
+        # bytes before committing to them ranks behind the owner
+        order_fn = getattr(env, "last_exchange_order", None)
+        precedence = order_fn() if order_fn is not None else None
+        for i in sorted(alive):
+            self.nodes[i].finalize_commit_stage(ctx.round, precedence)
         # a node that never committed has nothing to reveal
         reveals = {i: env.mutate_reveal(i, self.nodes[i].reveal(ctx.round))
                    for i in commits}
@@ -214,6 +241,13 @@ class CommitReveal(ConsensusPhase):
                     r, self.public_keys[sender], digest=digests[sender])
                 if res.accepted:
                     accepted[sender] += 1
+                    if res.evicted is not None:
+                        # tie-break eviction: this receiver no longer holds
+                        # the later committer's identical reveal
+                        accepted[res.evicted] = accepted.get(
+                            res.evicted, 1) - 1
+                        ctx.rejected.setdefault(res.evicted,
+                                                "plagiarized-model")
                 elif (res.reason != "no-commitment"
                       and sender not in ctx.rejected):
                     # 'no-commitment' only means this receiver missed the
@@ -295,12 +329,12 @@ class VoteCollection(ConsensusPhase):
             self._run_networked(ctx, sims)
             return
         honest_vote = int(np.argmax(sims))
+        honest_row = honest_predictions(n, honest_vote, ctx.g_max)
         votes = np.empty(n, np.int64)
         preds = np.empty((n, n), np.float32)
         for i in range(n):
             vote_i = honest_vote
-            preds_i = np.full((n,), (1.0 - ctx.g_max) / (n - 1), np.float32)
-            preds_i[vote_i] = ctx.g_max
+            preds_i = honest_row.copy()
             if ctx.vote_hook is not None:
                 vote_i, preds_i = ctx.vote_hook(i, vote_i, preds_i)
             votes[i] = vote_i
@@ -321,14 +355,14 @@ class VoteCollection(ConsensusPhase):
         masked = np.full(n, -np.inf, np.float64)
         masked[avail] = sims[avail]
         honest_vote = int(np.argmax(masked))
+        honest_row = honest_predictions(n, honest_vote, ctx.g_max)
         votes = np.full(n, -1, np.int64)
         preds = np.zeros((n, n), np.float32)
         voters = [i for i in sorted(env.alive()) if not env.withholds_vote(i)]
         landed = env.tx_landed("vote", ctx.round, voters)
         for i in voters:
             vote_i = honest_vote
-            preds_i = np.full((n,), (1.0 - ctx.g_max) / (n - 1), np.float32)
-            preds_i[vote_i] = ctx.g_max
+            preds_i = honest_row.copy()
             adversarial = env.adversary_vote(i, ctx.round, vote_i, preds_i)
             if adversarial is not None:
                 vote_i, preds_i = adversarial

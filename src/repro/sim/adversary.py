@@ -76,18 +76,27 @@ class Adversary:
 
 class Plagiarist(Adversary):
     """Copies the first honest node's FEL model instead of training
-    (wired by the runtime's ``plagiarists`` set). Its reveal necessarily
-    trails the victim's broadcast — it can only re-serve bytes it has
-    observed — so honest receivers always hold the victim's reveal first
-    and reject the copy as ``plagiarized-model``."""
+    (wired by the runtime's ``plagiarists`` set). It can only bind bytes
+    it has *observed*, so its commitment broadcast necessarily trails the
+    owner's by ``observe_lag`` — which is what convicts it: commitment
+    precedence (the commit transactions' chain-inclusion order) ranks the
+    copy behind the owner at every honest receiver, regardless of node
+    ids or of which *reveal* happened to arrive first (``reveal_lag`` can
+    be 0 — raced reveals are retroactively evicted by the tie-break in
+    ``HCDSNode.receive_reveal``). Every receiver rejects the copy as
+    ``plagiarized-model``."""
 
     plagiarizes = True
 
-    def __init__(self, node_id: int, reveal_lag: float = 30.0):
+    def __init__(self, node_id: int, reveal_lag: float = 30.0,
+                 observe_lag: float = 30.0):
         super().__init__(node_id)
         self.reveal_lag = reveal_lag
+        self.observe_lag = observe_lag
 
     def extra_delay(self, kind: str, round: int) -> float:
+        if kind == "commit":
+            return self.observe_lag
         return self.reveal_lag if kind == "reveal" else 0.0
 
 

@@ -81,6 +81,11 @@ class SimNetwork:
         self.round = 0
         self._seq = 0                 # heapq tie-break
         self.stats: Dict[str, Dict[str, int]] = {}
+        # senders of the most recent exchange, ordered by earliest
+        # network-wide delivery — the bus's stand-in for the permissioned
+        # chain's transaction-inclusion order (consumed by the commit
+        # phase to fix commitment precedence; see phases.CommitReveal)
+        self.last_order: List[int] = []
         for spec in self.config.churn:
             if not (0 <= spec.node < n_nodes):
                 raise ValueError(f"churn names unknown node {spec.node}")
@@ -153,13 +158,21 @@ class SimNetwork:
                 heapq.heappush(queue,
                                (at, self._seq, sender, recv, payloads[sender]))
         deliveries: Dict[int, Dict[int, Any]] = {}
+        first_arrival: Dict[int, float] = {}
         while queue:
             at, _, sender, recv, payload = heapq.heappop(queue)
             if at > deadline:
                 stat["timed_out"] += 1
                 continue
             stat["delivered"] += 1
+            first_arrival.setdefault(sender, at)    # heap pops in time order
             deliveries.setdefault(recv, {})[sender] = payload
+        # inclusion order: delivered senders by earliest arrival anywhere,
+        # then never-delivered senders by id (they reach the chain last)
+        self.last_order = sorted(first_arrival,
+                                 key=lambda s: (first_arrival[s], s))
+        self.last_order += [s for s in sorted(payloads)
+                            if s not in first_arrival]
         self.now = deadline
         return deliveries
 
@@ -295,6 +308,13 @@ class SimEnv:
                 if d:
                     delays[i] = d
         return self.network.exchange(kind, payloads, extra_delays=delays)
+
+    def last_exchange_order(self) -> List[int]:
+        """Sender order of the most recent exchange by earliest
+        network-wide delivery — the chain-inclusion order the commit phase
+        uses as commitment precedence (one shared order, not per-receiver
+        arrival, so every node resolves plagiarism ties identically)."""
+        return list(self.network.last_order)
 
     def tx_landed(self, kind: str, round: int,
                   senders: Iterable[int]) -> Set[int]:

@@ -58,3 +58,34 @@ def test_public_key_on_curve():
     x, y = kp.public_key
     p = crypto._P
     assert (y * y - (x * x * x + 7)) % p == 0
+
+
+def test_dsign_retry_signs_the_original_digest(monkeypatch):
+    """The r==0/s==0 retry must re-randomize the RFC-6979 nonce, NOT the
+    message: a retried signature still verifies against the caller's
+    digest. Forced here by handing dsign k=1 for a private key crafted so
+    that s = z + r·priv ≡ 0 (mod n)."""
+    digest = crypto.sha256_digest(b"retry me")
+    z = crypto._bits2int(digest)
+    r = crypto._GX % crypto._N                  # k=1 → R = G
+    priv = (crypto._N - z) * crypto._inv_mod(r, crypto._N) % crypto._N
+    pub = crypto._point_mul(priv, (crypto._GX, crypto._GY))
+
+    calls = []
+    real = crypto._rfc6979_k
+
+    def forced(msg_hash, key, extra=b""):
+        calls.append((msg_hash, extra))
+        if len(calls) == 1:
+            return 1                            # s == 0 → must retry
+        return real(msg_hash, key, extra=extra)
+
+    monkeypatch.setattr(crypto, "_rfc6979_k", forced)
+    tag = crypto.dsign(digest, priv)
+    assert len(calls) == 2
+    # the retry re-seeded the DRBG instead of mutating the message
+    assert [h for h, _ in calls] == [digest, digest]
+    assert calls[0][1] != calls[1][1]
+    assert crypto.dverify(tag, pub, digest)
+    # and the retried tag is batch-compatible like any other
+    assert crypto.verify_batch([(tag, pub, digest)]).ok

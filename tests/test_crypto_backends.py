@@ -1,0 +1,167 @@
+"""Differential backend parity for the secp256k1 point-arithmetic seam.
+
+Every backend — ``naive`` (Jacobian double-and-add), ``windowed``
+(fixed-window tables), ``batch`` (windowed + the RLC batch equation), and
+``jax`` (limb-vectorized RLC kernel) — must agree with the single source
+of truth, the per-message ``dverify`` predicate, on every input shape:
+valid tags, forged tags, tampered recovery bits, and bare ``(r, s)``
+pairs. Property-driven via the optional-hypothesis shim.
+
+The curve layer is pinned separately: the Jacobian formulas (including
+the batched-inversion window-table build) must reproduce the affine
+baseline bit-for-bit — that equivalence is what makes the backend sweep
+in ``benchmarks/bench_hcds.py`` a fair before/after.
+"""
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import crypto
+from repro.core.crypto import curve
+
+BACKENDS = list(crypto.BACKENDS)
+try:                                    # the jax backend is dependency-gated
+    crypto._get_ops("jax")
+except Exception:                       # pragma: no cover - jax-less installs
+    BACKENDS.remove("jax")
+
+_KPS = [crypto.ECDSAKeyPair.generate(bytes([i, 0xBE])) for i in range(6)]
+
+
+def _batch(n):
+    items = []
+    for i in range(n):
+        d = crypto.sha256_digest(b"parity", bytes([i]))
+        items.append((crypto.dsign(d, _KPS[i].private_key),
+                      _KPS[i].public_key, d))
+    return items
+
+
+def _mutate(item, shape):
+    """One input shape per code path verify_batch must route correctly."""
+    tag, pk, d = item
+    if shape == "valid":
+        return item
+    if shape == "bare-pair":            # legacy (r, s): singles fallback
+        return ((tag.r, tag.s), pk, d)
+    if shape == "flipped-v":            # defeats the equation, not dverify
+        return (crypto.Signature(tag.r, tag.s, tag.v ^ 1), pk, d)
+    if shape == "forged-s":
+        return (crypto.Signature(tag.r, tag.s ^ 0x2, tag.v), pk, d)
+    if shape == "forged-digest":
+        return (tag, pk, crypto.sha256_digest(d))
+    raise AssertionError(shape)
+
+
+_SHAPES = ("valid", "bare-pair", "flipped-v", "forged-s", "forged-digest")
+_ACCEPTED = {"valid", "bare-pair", "flipped-v"}
+
+
+# ---------------------------------------------------------------------------
+# dsign / dverify parity
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_dsign_dverify_agree_across_backends(seed):
+    kp = crypto.ECDSAKeyPair.generate(seed.to_bytes(4, "big"))
+    d = crypto.sha256_digest(seed.to_bytes(4, "big"))
+    tags = {}
+    for be in BACKENDS:
+        with crypto.use_backend(be):
+            tags[be] = crypto.dsign(d, kp.private_key)
+            assert crypto.dverify(tags[be], kp.public_key, d), be
+            assert not crypto.dverify(tags[be], kp.public_key,
+                                      crypto.sha256_digest(d)), be
+    # deterministic RFC-6979 nonces ⇒ bit-identical tags everywhere
+    assert len(set(tags.values())) == 1
+
+
+# ---------------------------------------------------------------------------
+# verify_batch parity: accept-iff-dverify under every backend
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(1, 4), mask=st.integers(0, 15),
+       shape=st.sampled_from(_SHAPES[1:]))
+def test_verify_batch_parity_across_backends(n, mask, shape):
+    items = _batch(n)
+    mutated = [i for i in range(n) if (mask >> i) & 1]
+    for i in mutated:
+        items[i] = _mutate(items[i], shape)
+    with crypto.use_backend("windowed"):
+        individually = [crypto.dverify(t, pk, d) for t, pk, d in items]
+    expected_bad = [i for i, ok in enumerate(individually) if not ok]
+    if shape in _ACCEPTED:
+        assert not expected_bad
+    results = {be: crypto.verify_batch(items, backend=be)
+               for be in BACKENDS}
+    for be, res in results.items():
+        assert res.ok == all(individually), (be, shape)
+        assert list(res.bad) == expected_bad, (be, shape)
+
+
+@settings(max_examples=6, deadline=None)
+@given(n=st.integers(2, 4), forged=st.integers(0, 3))
+def test_deduplicated_receiver_copies_parity(n, forged):
+    """The round workload — every receiver re-checks every sender — yields
+    identical per-copy attribution under every backend."""
+    forged %= n
+    items = _batch(n)
+    items[forged] = _mutate(items[forged], "forged-s")
+    copies = [it for it in items for _ in range(n - 1)]
+    expected = tuple(range(forged * (n - 1), (forged + 1) * (n - 1)))
+    for be in BACKENDS:
+        res = crypto.verify_batch(copies, backend=be)
+        assert not res.ok and res.bad == expected, be
+
+
+def test_mixed_shapes_one_batch_all_backends():
+    """Valid, bare-pair, flipped-v, and two forgery kinds in ONE batch:
+    the accept set is exactly the individually-valid items everywhere."""
+    items = [_mutate(it, shape)
+             for it, shape in zip(_batch(len(_SHAPES)), _SHAPES)]
+    expected = (3, 4)                   # the two forged shapes
+    for be in BACKENDS:
+        res = crypto.verify_batch(items, backend=be)
+        assert res.bad == expected, be
+
+
+# ---------------------------------------------------------------------------
+# curve-layer pins: Jacobian == affine baseline
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_jacobian_matches_affine_scalar_mul(seed):
+    k = (seed * 0x9E3779B97F4A7C15 + 1) % curve.N
+    table = curve.g_table()
+    affine = curve.affine_point_mul_windowed(k, table)
+    assert curve.point_mul_windowed(k, table) == affine
+    assert curve.point_mul_naive(k, curve.G) == affine
+
+
+@settings(max_examples=8, deadline=None)
+@given(a=st.integers(1, 1 << 128), b=st.integers(1, 1 << 128))
+def test_jacobian_multi_scalar_matches_affine(a, b):
+    pk = _KPS[0].public_key
+    pairs = [(a, curve.G), (b, pk)]
+    assert curve.multi_scalar(pairs) == curve.affine_multi_scalar(pairs)
+    assert curve.strauss_shamir(a, curve.G, b, pk) == \
+        curve.affine_multi_scalar(pairs)
+
+
+def test_window_table_batched_inversion_matches_affine_build():
+    """The Jacobian table build (one batched inversion for all 64×15
+    entries) must produce exactly the affine baseline's table: d·16^w·Q
+    via repeated affine adds."""
+    q = _KPS[1].public_key
+    table = curve.build_window_table(q)
+    base = q
+    for w in range(4):                  # spot-check the first few windows
+        expect = curve.INF
+        for d in range(15):
+            expect = curve.affine_point_add(expect, base)
+            assert table[w][d] == expect
+        for _ in range(curve._WINDOW_BITS):
+            base = curve.affine_point_add(base, base)

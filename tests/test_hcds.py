@@ -82,3 +82,53 @@ def test_hiding_commit_reveals_nothing(rng):
     big = {"w": rng.normal(size=(256, 256)).astype(np.float32)}
     c = node.commit(big, 0)
     assert len(c.digest) == 32
+
+
+def test_plagiarism_blame_is_delivery_order_independent(rng):
+    """Commit record order — not reveal arrival order — decides who the
+    plagiarist is: even when the copy's reveal arrives FIRST, the receiver
+    retroactively evicts it once the earlier committer's reveal lands."""
+    nodes = [HCDSNode(i) for i in range(3)]
+    models = _models(3, rng)
+    models[2] = models[0]          # node 2 plagiarizes node 0
+    commits = [n.commit(m, 0) for n, m in zip(nodes, models)]
+    pks = {n.node_id: n.keypair.public_key for n in nodes}
+    for c in commits:
+        for n in nodes:
+            if n.node_id != c.node_id:
+                n.receive_commit(c, pks[c.node_id])
+    for n in nodes:
+        n.finalize_commit_stage(0)
+    reveals = [n.reveal(0) for n in nodes]
+    receiver = nodes[1]
+    # adversarial delivery: the copy arrives before the victim's reveal
+    assert receiver.receive_reveal(reveals[2], pks[2]).accepted
+    res = receiver.receive_reveal(reveals[0], pks[0])
+    assert res.accepted                 # the victim is never rejected
+    assert res.evicted == 2             # the copy is retroactively blamed
+    accepted = receiver.accepted_models(0)
+    assert 0 in accepted and 2 not in accepted
+
+
+def test_plagiarism_blame_agrees_across_delivery_orders(rng):
+    """Two receivers seeing opposite reveal arrival orders converge on the
+    same accepted set and the same guilty node."""
+    nodes = [HCDSNode(i) for i in range(4)]
+    models = _models(4, rng)
+    models[3] = models[1]          # node 3 plagiarizes node 1
+    commits = [n.commit(m, 0) for n, m in zip(nodes, models)]
+    pks = {n.node_id: n.keypair.public_key for n in nodes}
+    for c in commits:
+        for n in nodes:
+            if n.node_id != c.node_id:
+                n.receive_commit(c, pks[c.node_id])
+    for n in nodes:
+        n.finalize_commit_stage(0)
+    reveals = {n.node_id: n.reveal(0) for n in nodes}
+    orders = {0: [1, 3, 2], 2: [3, 1, 0]}   # receiver -> arrival order
+    for recv, order in orders.items():
+        for sender in order:
+            nodes[recv].receive_reveal(reveals[sender], pks[sender])
+    for recv in orders:
+        accepted = nodes[recv].accepted_models(0)
+        assert 1 in accepted and 3 not in accepted, recv

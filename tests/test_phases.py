@@ -164,3 +164,43 @@ def test_vote_hook_still_supported_on_run_round(rng):
 
     c.run_round(models, [10.0] * n, vote_hook=hook)
     assert calls == list(range(n))
+
+
+# ---------------------------------------------------------------------------
+# n_nodes = 1: the degenerate single-voter network (no peers to divide
+# (1 − G_max) over) must complete a round instead of dividing by zero
+# ---------------------------------------------------------------------------
+
+def test_honest_predictions_one_hot_at_single_node():
+    from repro.core.model_eval import make_predictions
+    from repro.core.phases import honest_predictions
+    row = honest_predictions(1, 0, 0.99)
+    assert row.shape == (1,) and row[0] == 1.0
+    jrow = np.asarray(make_predictions(0, 1))
+    assert jrow.shape == (1,) and jrow[0] == 1.0
+    # the multi-node path is unchanged: rows still sum to 1 with g_max on
+    # the voted index
+    multi = honest_predictions(5, 2, 0.99)
+    assert multi[2] == np.float32(0.99)
+    assert np.isclose(multi.sum(), 1.0)
+
+
+def test_single_node_round_completes(rng):
+    c = PoFELConsensus(1)
+    rec = c.run_round(_models(1, rng), [10.0])
+    assert rec.leader_id == 0
+    assert rec.votes.tolist() == [0]
+    assert rec.block is not None and rec.block.leader_id == 0
+    assert c.ledgers[0].verify_chain()
+
+
+def test_run_bhfl_single_node_degenerates_cleanly():
+    """api.run_bhfl(n_nodes=1) is a legitimate (if pointless) deployment:
+    one edge server self-elects every round."""
+    from repro import api
+    from repro.data.synthetic import make_mnist_like
+    run = api.run_bhfl(n_nodes=1, clients_per_node=2, rounds=1,
+                       fel_iterations=1,
+                       data=make_mnist_like(n_train=64, n_test=32, seed=0))
+    assert run.chain_height == 1 and run.chain_valid
+    assert run.history[-1].leader_id == 0

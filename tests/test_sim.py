@@ -267,3 +267,44 @@ def test_config_overrides_forwarded_by_name():
 def test_config_overrides_conflict_with_explicit_cfg():
     with pytest.raises(ValueError, match="set them on the BHFLConfig"):
         api.run_bhfl(cfg=BHFLConfig(), lr=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# plagiarism attribution under jittered delivery (the §4.1 tie-break)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("plag,seed", [(3, 0), (3, 3), (0, 0)])
+def test_plagiarist_blamed_consistently_regardless_of_arrival_order(plag,
+                                                                    seed):
+    """With no reveal lag the copy's reveal races the victim's at every
+    receiver (per-receiver jittered arrival order). Attribution must come
+    from commitment precedence — the chain-inclusion order of the commit
+    stage, in which the copy necessarily trails (it could only be
+    constructed after observing the victim's bytes): every honest node
+    ends the round holding the victim's model and blaming the (actually
+    guilty) plagiarist — even one with a LOWER id than its victim — and
+    the honest victim never lands in the round's rejections."""
+    from repro.sim.adversary import Plagiarist
+    victim = 0 if plag != 0 else 1  # Plagiarist copies the first honest model
+    sc = sim.Scenario(
+        name=f"plagiarist_no_lag_{plag}_{seed}",
+        description="plagiarist whose reveal races the victim's",
+        rounds=3, n_nodes=4,
+        net=NetworkConfig(link=LinkSpec(base_latency=1.0, jitter=8.0)),
+        adversaries=(Plagiarist(plag, reveal_lag=0.0),))
+    run = api.run_bhfl(scenario=sc, seed=seed)
+    report = run.scenario_report
+    assert report.liveness and report.safety_violations == 0
+    for r in report.rounds:
+        assert r.rejected.get(plag) == "plagiarized-model"
+        assert victim not in r.rejected
+        assert victim in (r.available or [])
+        assert plag not in (r.available or [])
+        assert r.leader != plag
+    # every honest receiver converged on the same accepted set: the
+    # victim's reveal in, the byte-identical copy out
+    nodes = run.runtime.consensus.hcds_nodes
+    last_round = report.rounds[-1].round
+    for i in run.runtime.env.honest_ids():
+        accepted = nodes[i].accepted_models(last_round)
+        assert victim in accepted and plag not in accepted, i
