@@ -27,6 +27,7 @@ a second signature.
 
 from __future__ import annotations
 
+import hmac
 from dataclasses import dataclass
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
@@ -34,6 +35,29 @@ from repro.core import crypto
 
 KINDS = ("commit", "reveal", "vote", "block")
 _DOMAIN = b"pofel-envelope-v1"
+
+
+def digests_equal(a: bytes, b: bytes) -> bool:
+    """Constant-time equality for commitment digests / payload digests.
+
+    A short-circuiting ``==`` leaks the length of the matching prefix
+    through timing (the RA2xx rule class ``repro.analysis`` enforces);
+    ``hmac.compare_digest`` examines every byte regardless."""
+    return hmac.compare_digest(a, b)
+
+
+def tags_equal(a, b) -> bool:
+    """Constant-time equality for signature tags, accepting any
+    representation :meth:`crypto.Signature.coerce` does (Signature, bare
+    ``(r, s)``, hex). Compares the canonical 65-byte wire forms; a bare
+    ``(r, s)`` pair equals a Signature with the same (r, s) and v == 0.
+    A tag that cannot be canonicalized (adversarial out-of-range values)
+    is simply unequal — the caller's dverify fallback rejects it."""
+    try:
+        return hmac.compare_digest(crypto.Signature.coerce(a).to_bytes(),
+                                   crypto.Signature.coerce(b).to_bytes())
+    except (TypeError, ValueError, OverflowError):
+        return False
 
 
 def signing_digest(kind: str, round: int, sender: int,

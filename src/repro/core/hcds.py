@@ -39,6 +39,7 @@ from typing import Any, Dict, List, Optional
 
 from repro.core import crypto
 from repro.core.envelope import (SignedEnvelope, commit_signing_digest,
+                                 digests_equal, tags_equal,
                                  verify_envelopes)
 from repro.core.serialization import serialize_pytree
 
@@ -137,8 +138,11 @@ class HCDSNode:
             return HCDSResult(False, "bad-signature")
         per_round = self._commits.setdefault(c.round, {})
         # byte-identical digest from a different node ⇒ replayed commitment
+        # (constant-time compare: a timing probe must not learn how much
+        # of a guessed commitment digest matched — RA201)
         for other_id, other in per_round.items():
-            if other_id != c.node_id and other.digest == c.digest:
+            if other_id != c.node_id and digests_equal(other.digest,
+                                                       c.digest):
                 return HCDSResult(False, "duplicate-digest")
         order = self._commit_order.setdefault(c.round, {})
         if c.node_id not in order:
@@ -195,9 +199,9 @@ class HCDSNode:
             return HCDSResult(False, "no-commitment")
         if digest is None:
             digest = crypto.sha256_digest(r.nonce, r.model_bytes)
-        if digest != c.digest:
+        if not digests_equal(digest, c.digest):
             return HCDSResult(False, "digest-mismatch")
-        if tuple(r.tag) != tuple(c.tag) and not crypto.dverify(
+        if not tags_equal(r.tag, c.tag) and not crypto.dverify(
                 r.tag, sender_pk,
                 commit_signing_digest(r.round, r.node_id, digest)):
             return HCDSResult(False, "bad-signature")

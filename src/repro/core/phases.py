@@ -43,7 +43,8 @@ from repro.blockchain.smart_contract import (ContractError, VoteSubmission,
                                              VoteTallyContract)
 from repro.core import crypto
 from repro.core.btsv import BTSVResult
-from repro.core.envelope import commit_signing_digest, verify_envelopes
+from repro.core.envelope import (commit_signing_digest, tags_equal,
+                                 verify_envelopes)
 from repro.core.hcds import HCDSNode, run_hcds_round
 from repro.core.model_eval import (MEResult, make_predictions,
                                    model_evaluation_pytrees)
@@ -222,7 +223,7 @@ class CommitReveal(ConsensusPhase):
         digests = {i: crypto.sha256_digest(r.nonce, r.model_bytes)
                    for i, r in reveals.items()}
         retagged = [i for i, r in reveals.items()
-                    if tuple(r.tag) != tuple(commits[i].tag)]
+                    if not tags_equal(r.tag, commits[i].tag)]
         reveal_bad = crypto.verify_batch(
             [(reveals[i].tag, self.public_keys[i],
               commit_signing_digest(ctx.round, i, digests[i]))

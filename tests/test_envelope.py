@@ -112,7 +112,8 @@ def test_unknown_backend_rejected():
        round=st.integers(0, 1000), sender=st.integers(0, 7))
 def test_envelope_seal_verify_and_dict_roundtrip(kind, round, sender):
     payload = crypto.sha256_digest(b"payload", kind.encode())
-    env = SignedEnvelope.seal(kind, round, sender, payload,
+    # (kind is drawn from the registry by the strategy above)
+    env = SignedEnvelope.seal(kind, round, sender, payload,  # noqa: RA402
                               _KPS[sender].private_key)
     assert env.verify(_KPS[sender].public_key)
     assert not env.verify(_KPS[(sender + 1) % 8].public_key)
@@ -127,7 +128,8 @@ def test_envelope_domain_separation():
     commit = SignedEnvelope.seal("commit", 3, 1, payload,
                                  _KPS[1].private_key)
     for other in ("reveal", "vote", "block"):
-        replayed = SignedEnvelope(other, 3, 1, payload, commit.signature)
+        # deliberately replays the tag under a different (registered) kind
+        replayed = SignedEnvelope(other, 3, 1, payload, commit.signature)  # noqa: RA402
         assert not replayed.verify(_KPS[1].public_key)
     assert commit_signing_digest(3, 1, payload) == commit.signing_digest()
 
