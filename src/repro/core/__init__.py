@@ -6,6 +6,7 @@
 - incentive — two-stage Stackelberg game solver
 - phases — Alg. 1 as five composable protocol stages + RoundContext
 - consensus — the PoFEL round orchestrator composing the phases
+- recovery — durable per-node protocol WAL + crash-recovery primitives
 
 Submodule symbols are re-exported lazily (PEP 562) because the blockchain
 package depends on ``repro.core.crypto`` while ``repro.core.consensus``
@@ -25,6 +26,8 @@ _EXPORTS = {
     "Commitment": "repro.core.hcds", "HCDSNode": "repro.core.hcds",
     "HCDSResult": "repro.core.hcds", "Reveal": "repro.core.hcds",
     "run_hcds_round": "repro.core.hcds",
+    "NodeWAL": "repro.core.recovery", "WALConflict": "repro.core.recovery",
+    "WALRecord": "repro.core.recovery",
     "NodeParams": "repro.core.incentive", "PublisherParams": "repro.core.incentive",
     "StackelbergSolution": "repro.core.incentive",
     "stackelberg_equilibrium": "repro.core.incentive",

@@ -32,6 +32,7 @@ from repro.core.hcds import HCDSNode
 from repro.core.phases import (BlockMint, CommitReveal, ConsensusPhase,
                                ModelEvaluation, PhaseHook, RoundContext,
                                Tally, VoteCollection, VoteHook, run_phases)
+from repro.core.recovery import NodeWAL
 
 
 @dataclass
@@ -72,7 +73,16 @@ class PoFELConsensus:
         self.n_nodes = n_nodes
         self.btsv_cfg = btsv_cfg
         self.g_max = g_max
-        self.hcds_nodes = [HCDSNode(i, nonce_len=nonce_len) for i in range(n_nodes)]
+        # one durable protocol WAL per node: commits/reveals/votes/blocks
+        # are logged before signing, so a node restarted through the
+        # recovery path (repro.core.recovery) replays instead of
+        # re-signing, and a conflicting statement for an already-logged
+        # round raises WALConflict — the double-sign protection §4.1
+        # assumes. (A simulated amnesia fault detaches its node's WAL.)
+        self.wals: Dict[int, NodeWAL] = {i: NodeWAL(i)
+                                         for i in range(n_nodes)}
+        self.hcds_nodes = [HCDSNode(i, nonce_len=nonce_len, wal=self.wals[i])
+                           for i in range(n_nodes)]
         self.public_keys = {n.node_id: n.keypair.public_key for n in self.hcds_nodes}
         # the contract knows the consortium's keys, so vote envelopes are
         # batch-verified (and forgeries attributed) at tally time; every
@@ -95,10 +105,11 @@ class PoFELConsensus:
             ModelEvaluation(),
             VoteCollection(self.contract,
                            signers={n.node_id: n.keypair
-                                    for n in self.hcds_nodes}),
+                                    for n in self.hcds_nodes},
+                           wals=self.wals),
             Tally(self.contract),
             BlockMint(self.ledgers, self.hcds_nodes, self.public_keys,
-                      self.contract),
+                      self.contract, wals=self.wals),
         ]
 
     # -- phase plumbing ------------------------------------------------------

@@ -92,11 +92,17 @@ class HCDSNode:
     """
 
     def __init__(self, node_id: int, keypair: Optional[crypto.ECDSAKeyPair] = None,
-                 nonce_len: int = 32):
+                 nonce_len: int = 32, wal: Optional[Any] = None):
         self.node_id = node_id
         self.keypair = keypair or crypto.ECDSAKeyPair.generate(
             seed=node_id.to_bytes(8, "big"))
         self.nonce_len = nonce_len
+        # optional durable protocol WAL (repro.core.recovery.NodeWAL).
+        # With one attached, commit()/reveal() write through before
+        # signing: a restart replays the log instead of re-drawing a
+        # nonce, and a *conflicting* re-commit for an already-logged
+        # round raises WALConflict instead of equivocating.
+        self.wal = wal
         # received commitments / accepted reveals per round
         self._commits: Dict[int, Dict[int, Commitment]] = {}
         self._reveals: Dict[int, Dict[int, Reveal]] = {}
@@ -117,15 +123,40 @@ class HCDSNode:
         model so one round serializes each model exactly once (the driver
         reuses the same bytes for the block's model digests).
         """
-        nonce = crypto.random_nonce(self.nonce_len)
         if model_bytes is None:
             model_bytes = serialize_pytree(model)
+        if self.wal is not None:
+            # already committed for this round (pre-crash)? Re-issue the
+            # logged statement byte-for-byte instead of double-signing; a
+            # *different* model for the same round raises WALConflict
+            rec = self.wal.commit_record(round, model_bytes)
+            if rec is not None:
+                return self.restore_own_commit(
+                    round, nonce=bytes.fromhex(rec.data["nonce"]),
+                    model_bytes=model_bytes,
+                    digest=bytes.fromhex(rec.data["commitment"]),
+                    tag=crypto.Signature.coerce(rec.data["tag"]))
+        nonce = crypto.random_nonce(self.nonce_len)
         digest = crypto.sha256_digest(nonce, model_bytes)
         env = SignedEnvelope.seal("commit", round, self.node_id, digest,
                                   self.keypair.private_key)
+        if self.wal is not None:
+            self.wal.log_commit(round, model_bytes, nonce, digest,
+                                env.signature)
         self._own[round] = (nonce, model_bytes)
         c = Commitment(self.node_id, round, digest, env.signature)
         # record own commit (self-signed just now — no re-verification)
+        self.receive_commit(c, self.keypair.public_key, verified=True)
+        return c
+
+    def restore_own_commit(self, round: int, nonce: bytes,
+                           model_bytes: bytes, digest: bytes,
+                           tag: crypto.Signature) -> Commitment:
+        """Recovery path (``repro.core.recovery.replay_wal``): reinstate
+        this node's own already-signed commitment after a restart, without
+        fresh signing. Idempotent."""
+        self._own[round] = (nonce, model_bytes)
+        c = Commitment(self.node_id, round, digest, tag)
         self.receive_commit(c, self.keypair.public_key, verified=True)
         return c
 
@@ -137,6 +168,13 @@ class HCDSNode:
         if not verified and not c.envelope.verify(sender_pk):
             return HCDSResult(False, "bad-signature")
         per_round = self._commits.setdefault(c.round, {})
+        prior = per_round.get(c.node_id)
+        if prior is not None and not digests_equal(prior.digest, c.digest):
+            # the same sender already committed a DIFFERENT digest this
+            # round: equivocation (e.g. an amnesiac restart re-drawing its
+            # nonce). Keep the first statement — precedence and any reveal
+            # checks were built on it — and attribute the violation.
+            return HCDSResult(False, "commit-equivocation")
         # byte-identical digest from a different node ⇒ replayed commitment
         # (constant-time compare: a timing probe must not learn how much
         # of a guessed commitment digest matched — RA201)
@@ -179,6 +217,11 @@ class HCDSNode:
         """Alg. 2 line 11: broadcast (r, w, tag)."""
         nonce, model_bytes = self._own[round]
         c = self._commits[round][self.node_id]
+        if self.wal is not None:
+            # reveal-sent record: conflicts are impossible while commits
+            # are WAL-guarded, but the record marks the round's reveal as
+            # issued so a restarted node re-broadcasts, never re-derives
+            self.wal.log_reveal(round, c.digest)
         r = Reveal(self.node_id, round, nonce, model_bytes, c.tag)
         self.receive_reveal(r, self.keypair.public_key)
         return r

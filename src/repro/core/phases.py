@@ -37,7 +37,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.blockchain.block import Block
+from repro.blockchain.block import Block, block_hash
 from repro.blockchain.ledger import InvalidBlock, Ledger
 from repro.blockchain.smart_contract import (ContractError, VoteSubmission,
                                              VoteTallyContract)
@@ -211,11 +211,56 @@ class CommitReveal(ConsensusPhase):
         # bytes before committing to them ranks behind the owner
         order_fn = getattr(env, "last_exchange_order", None)
         precedence = order_fn() if order_fn is not None else None
+        # mid-phase crash faults at the commit→reveal boundary: the node's
+        # volatile state dies with it. A fast reboot re-broadcasts its
+        # commit — byte-identical after a WAL replay (receivers treat the
+        # duplicate as idempotent), a FRESH statement under amnesia, which
+        # every honest receiver detects and attributes as equivocation
+        equivocators: set = set()
+        crash_at = getattr(env, "crash_at", None)
+        if crash_at is not None:
+            late: Dict[int, Any] = {}
+            for i in sorted(commits):
+                spec = crash_at(i, "after_commit", ctx.round)
+                if spec is None:
+                    continue
+                if not env.execute_crash(spec, i):
+                    continue        # still down: nothing to re-broadcast
+                late[i] = self.nodes[i].commit(ctx.models[i], ctx.round,
+                                               model_bytes=model_bytes[i])
+            if late:
+                late_senders = sorted(late)
+                late_batch = verify_envelopes(
+                    [late[i].envelope for i in late_senders],
+                    self.public_keys)
+                late_forged = {late_senders[j] for j in late_batch.bad}
+                for recv, msgs in env.exchange("commit", ctx.round,
+                                               late).items():
+                    for sender in sorted(msgs):
+                        if sender in late_forged or recv == sender:
+                            continue
+                        res = self.nodes[recv].receive_commit(
+                            msgs[sender], self.public_keys[sender],
+                            verified=True)
+                        if (not res.accepted
+                                and res.reason == "commit-equivocation"):
+                            equivocators.add(sender)
+                for i in sorted(equivocators):
+                    ctx.rejected[i] = "commit-equivocation"
+                    env.note("equivocation_detected", kind="commit",
+                             round=ctx.round, node=i)
+                # precedence came from the FIRST commit exchange (the one
+                # the reveals bind to); rank re-broadcasts that never made
+                # that exchange behind everything that did
+                if precedence is not None:
+                    precedence += [i for i in late_senders
+                                   if i not in precedence]
         for i in sorted(alive):
             self.nodes[i].finalize_commit_stage(ctx.round, precedence)
-        # a node that never committed has nothing to reveal
+        # a node that never committed — or that crashed and is still down —
+        # has nothing to reveal
         reveals = {i: env.mutate_reveal(i, self.nodes[i].reveal(ctx.round))
-                   for i in commits}
+                   for i in sorted(commits) if i in env.alive()}
         # hash each reveal once (shared across receivers) and batch the
         # Alg. 2 line-15 re-verification for tags that differ from the
         # sender's commit tag (tag-equal reveals were proven by the commit
@@ -233,7 +278,12 @@ class CommitReveal(ConsensusPhase):
             ctx.rejected.setdefault(i, "forged-envelope")
             env.note("envelope_rejected", kind="reveal", round=ctx.round,
                      node=i)
-        accepted = {i: 1 for i in commits}      # every node holds its own
+        # who holds whose reveal, as receiver SETS (each revealer holds its
+        # own): set semantics make the plagiarism-eviction bookkeeping
+        # idempotent per receiver — several receivers evicting the same
+        # copier discard their own ids once each, so the count can never
+        # go negative and skew the quorum comparison
+        holders: Dict[int, set] = {i: {i} for i in reveals}
         for recv, msgs in env.exchange("reveal", ctx.round, reveals).items():
             for sender, r in msgs.items():
                 if sender in forged_reveals:
@@ -241,12 +291,11 @@ class CommitReveal(ConsensusPhase):
                 res = self.nodes[recv].receive_reveal(
                     r, self.public_keys[sender], digest=digests[sender])
                 if res.accepted:
-                    accepted[sender] += 1
+                    holders.setdefault(sender, set()).add(recv)
                     if res.evicted is not None:
                         # tie-break eviction: this receiver no longer holds
                         # the later committer's identical reveal
-                        accepted[res.evicted] = accepted.get(
-                            res.evicted, 1) - 1
+                        holders.get(res.evicted, set()).discard(recv)
                         ctx.rejected.setdefault(res.evicted,
                                                 "plagiarized-model")
                 elif (res.reason != "no-commitment"
@@ -256,7 +305,8 @@ class CommitReveal(ConsensusPhase):
                     # violation) — it must not brand an honest node
                     ctx.rejected[sender] = res.reason
         available = [i for i in range(ctx.n_nodes)
-                     if accepted.get(i, 0) >= env.quorum]
+                     if len(holders.get(i, ())) >= env.quorum
+                     and i not in equivocators]
         ctx.available = available
         for i in range(ctx.n_nodes):
             if i not in available:
@@ -309,12 +359,20 @@ class VoteCollection(ConsensusPhase):
     name = "vote_collection"
 
     def __init__(self, contract: VoteTallyContract,
-                 signers: Optional[Dict[int, crypto.ECDSAKeyPair]] = None):
+                 signers: Optional[Dict[int, crypto.ECDSAKeyPair]] = None,
+                 wals: Optional[Dict[int, Any]] = None):
         self.contract = contract
         self.signers = signers or {}
+        # per-node protocol WALs (repro.core.recovery): a vote is logged
+        # before it is signed, so re-signing a conflicting vote for an
+        # already-voted round raises WALConflict instead of equivocating
+        self.wals = wals or {}
 
     def _submission(self, node_id: int, round: int, vote: int,
                     preds: np.ndarray) -> VoteSubmission:
+        wal = self.wals.get(node_id)
+        if wal is not None:
+            wal.log_vote(round, vote)
         kp = self.signers.get(node_id)
         if kp is None:
             return VoteSubmission(node_id, round, vote, preds)
@@ -385,6 +443,15 @@ class VoteCollection(ConsensusPhase):
                 continue
             votes[i] = vote_i
             preds[i] = preds_i
+        # mid-phase crash faults at the vote→tally boundary: the vote is
+        # already on-chain (or lost in transit) — the crash only costs the
+        # node the rest of the round; it rejoins via the recovery path
+        crash_at = getattr(env, "crash_at", None)
+        if crash_at is not None:
+            for i in voters:
+                spec = crash_at(i, "after_vote", ctx.round)
+                if spec is not None:
+                    env.execute_crash(spec, i)
         ctx.votes = votes
         ctx.predictions = preds
 
@@ -436,11 +503,13 @@ class BlockMint(ConsensusPhase):
 
     def __init__(self, ledgers: Sequence[Ledger], nodes: Sequence[HCDSNode],
                  public_keys: Dict[int, crypto.Point],
-                 contract: VoteTallyContract):
+                 contract: VoteTallyContract,
+                 wals: Optional[Dict[int, Any]] = None):
         self.ledgers = list(ledgers)
         self.nodes = list(nodes)
         self.public_keys = public_keys
         self.contract = contract
+        self.wals = wals or {}
 
     def run(self, ctx: RoundContext) -> None:
         if ctx.leader is None or ctx.btsv is None or ctx.votes is None:
@@ -487,7 +556,7 @@ class BlockMint(ConsensusPhase):
             extra["available"] = list(avail)
         if ctx.extra.get("reelections"):
             extra["reelections"] = int(ctx.extra["reelections"])
-        return Block(
+        block = Block(
             index=self.ledgers[leader].height,
             round=ctx.round,
             leader_id=leader,
@@ -499,6 +568,12 @@ class BlockMint(ConsensusPhase):
             advotes={j: float(ctx.btsv.advotes[j]) for j in range(n)},
             extra=extra,
         ).signed(self.nodes[leader].keypair)
+        wal = self.wals.get(leader)
+        if wal is not None:
+            # block-signed record: a restarted leader cannot sign a second,
+            # conflicting block for a round it already minted
+            wal.log_block(ctx.round, block_hash(block))
+        return block
 
     def _run_networked(self, ctx: RoundContext) -> None:
         env = ctx.env
@@ -506,30 +581,47 @@ class BlockMint(ConsensusPhase):
         # stable argsort on the negated tallies: ties break to lower id, so
         # every node derives the same re-election order from the contract
         ranking = [int(i) for i in np.argsort(-advotes, kind="stable")]
+        crash_at = getattr(env, "crash_at", None)
         reelections = 0
         leader = None
+        block = None
+        votes = {i: int(v) for i, v in enumerate(ctx.votes) if v >= 0}
         for cand in ranking:
             if env.leader_fails(cand, ctx.round, reelections):
                 env.note("leader_timeout", round=ctx.round, candidate=cand,
                          attempt=reelections)
                 reelections += 1
                 continue
-            leader = cand
+            led = self.ledgers[cand]
+            # a leader that itself missed rounds first catches up with the
+            # best chain it can reach, so it never mints on a stale head
+            for peer in env.reachable_peers(cand):
+                if self.ledgers[peer].height > led.height:
+                    led.fork_choice(self.ledgers[peer].blocks,
+                                    self.public_keys)
+            ctx.extra["reelections"] = reelections
+            cand_block = self._mint(ctx, cand, votes=votes)
+            spec = (crash_at(cand, "after_mint", ctx.round)
+                    if crash_at is not None else None)
+            if spec is not None:
+                # the elected leader minted and signed (the statement is in
+                # its WAL) but died before appending or broadcasting: to
+                # every peer this is an ordinary leader timeout, so the
+                # signed-but-unseen block vanishes and the next candidate
+                # takes over — no conflicting block ever reaches a ledger
+                env.note("leader_timeout", round=ctx.round, candidate=cand,
+                         attempt=reelections)
+                env.execute_crash(spec, cand)
+                reelections += 1
+                continue
+            leader, block = cand, cand_block
             break
-        if leader is None:
+        if leader is None or block is None:
             raise QuorumNotReached(
                 f"round {ctx.round}: every leader candidate timed out")
         ctx.leader = leader
         ctx.extra["reelections"] = reelections
-
         led = self.ledgers[leader]
-        # a leader that itself missed rounds first catches up with the best
-        # chain it can reach, so it never mints on a stale head
-        for peer in env.reachable_peers(leader):
-            if self.ledgers[peer].height > led.height:
-                led.fork_choice(self.ledgers[peer].blocks, self.public_keys)
-        votes = {i: int(v) for i, v in enumerate(ctx.votes) if v >= 0}
-        block = self._mint(ctx, leader, votes=votes)
 
         def plausible(b: Block) -> int:
             """Env-mode analogue of the BTSV re-tally check: the block's

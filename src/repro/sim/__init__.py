@@ -18,10 +18,10 @@ or through the facade — ``api.run_bhfl(scenario="byzantine_third")``.
 """
 
 from repro.sim.adversary import (Adversary, BriberyVoter, CommitWithholder,
-                                 EnvelopeForger, LazyLeader, LeaderCrash,
-                                 Plagiarist, RevealEquivocator)
+                                 CrashRestart, EnvelopeForger, LazyLeader,
+                                 LeaderCrash, Plagiarist, RevealEquivocator)
 from repro.sim.network import (ChurnSpec, LinkSpec, NetworkConfig,
-                               PartitionSpec, SimEnv, SimNetwork)
+                               PartitionSpec, RetrySpec, SimEnv, SimNetwork)
 from repro.sim.report import RoundReport, ScenarioReport
 from repro.sim.runner import build_env, run_scenario
 from repro.sim.scenarios import (SCENARIOS, Scenario, get_scenario,
@@ -32,7 +32,8 @@ __all__ = [
     "Scenario", "SCENARIOS", "get_scenario", "list_scenarios", "register",
     "ScenarioReport", "RoundReport",
     "SimNetwork", "SimEnv", "NetworkConfig", "LinkSpec", "PartitionSpec",
-    "ChurnSpec",
+    "ChurnSpec", "RetrySpec",
     "Adversary", "Plagiarist", "BriberyVoter", "CommitWithholder",
     "RevealEquivocator", "EnvelopeForger", "LazyLeader", "LeaderCrash",
+    "CrashRestart",
 ]

@@ -18,6 +18,11 @@ step they subvert:
                         elected, forcing a re-election
 :class:`LeaderCrash`    role adversary: the elected leader times out in
                         the configured rounds, whoever it is
+:class:`CrashRestart`   benign (non-Byzantine) mid-phase crash fault: the
+                        node dies at a named phase boundary and restarts
+                        through the recovery path (WAL replay + ledger
+                        re-sync); ``amnesia=True`` drops the WAL, turning
+                        the restart into attributable equivocation
 =====================  ====================================================
 
 Adversaries are stateless across runs — any randomness flows through the
@@ -38,6 +43,10 @@ class Adversary:
     isolated (one deviation per adversary class)."""
 
     plagiarizes: bool = False
+    # Byzantine adversaries deviate from the protocol; benign faults
+    # (crash/restart) set this False so SimEnv keeps their nodes in the
+    # honest safety/leadership accounting
+    byzantine: bool = True
 
     def __init__(self, node_id: Optional[int] = None):
         self.node_id = node_id
@@ -194,6 +203,63 @@ class LazyLeader(Adversary):
 
     def fails_as_leader(self, round: int, node: int, attempt: int) -> bool:
         return node == self.node_id
+
+
+class CrashRestart(Adversary):
+    """Benign mid-phase crash/restart fault (not Byzantine): the node dies
+    at a named phase boundary of round ``round`` and comes back through
+    the recovery path (``repro.core.recovery``).
+
+    ``at`` names the boundary:
+
+    * ``"after_commit"`` — after its commit broadcast, before its reveal.
+      With ``down_rounds=0`` the node fast-reboots inside the phase and
+      re-broadcasts its commit: byte-identical after the WAL replay
+      (receivers treat the duplicate as idempotent and its reveal still
+      binds), or a FRESH statement under ``amnesia=True`` — which honest
+      receivers must detect and attribute as ``commit-equivocation``
+      rather than crash the round.
+    * ``"after_vote"`` — after its vote transaction; the vote stands, the
+      node misses the rest of the round and rejoins later.
+    * ``"after_mint"`` — as the elected leader, after minting and signing
+      the block but before appending/broadcasting it: peers observe an
+      ordinary leader timeout and re-elect; the signed block exists only
+      in the crashed leader's WAL. Usually used as a ROLE fault
+      (``node_id=None``) — it fires for whichever node wins the election.
+
+    ``down_rounds > 0`` keeps the node dark until the start of round
+    ``round + down_rounds``, where ``SimEnv.begin_round`` drives the
+    rejoin: volatile state wiped, WAL replayed, ledger re-synced from the
+    best reachable peer chain. ``amnesia=True`` detaches the node's WAL
+    at bind time — the restart replays nothing."""
+
+    byzantine = False
+    crash_fault = True
+    POINTS = ("after_commit", "after_vote", "after_mint")
+
+    def __init__(self, node_id: Optional[int], at: str, round: int,
+                 down_rounds: int = 0, amnesia: bool = False):
+        if at not in self.POINTS:
+            raise ValueError(f"at must be one of {self.POINTS}, got {at!r}")
+        if round < 0:
+            raise ValueError(f"round must be >= 0, got {round}")
+        if down_rounds < 0:
+            raise ValueError(f"down_rounds must be >= 0, got {down_rounds}")
+        if node_id is None and at != "after_mint":
+            raise ValueError(
+                "a role CrashRestart (node_id=None) only makes sense at "
+                "'after_mint' — the elected leader is the only node a "
+                "role can identify")
+        super().__init__(node_id)
+        self.at = at
+        self.in_round = round
+        self.down_rounds = down_rounds
+        self.amnesia = amnesia
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (f"<CrashRestart node={self.node_id} at={self.at} "
+                f"round={self.in_round} down={self.down_rounds} "
+                f"amnesia={self.amnesia}>")
 
 
 class LeaderCrash(Adversary):

@@ -49,6 +49,12 @@ class PartitionSpec:
     start_round: int
     end_round: int
 
+    def __post_init__(self) -> None:
+        if self.start_round >= self.end_round:
+            raise ValueError(
+                f"partition window [{self.start_round}, {self.end_round}) is "
+                f"empty: start_round must be < end_round")
+
 
 @dataclass(frozen=True)
 class ChurnSpec:
@@ -59,6 +65,61 @@ class ChurnSpec:
     down_from: int
     down_until: int = 1 << 30
 
+    def __post_init__(self) -> None:
+        if self.down_from >= self.down_until:
+            raise ValueError(
+                f"churn window [{self.down_from}, {self.down_until}) for "
+                f"node {self.node} is empty: down_from must be < down_until")
+
+
+@dataclass(frozen=True)
+class RetrySpec:
+    """Reliable-delivery policy for :meth:`SimNetwork.exchange`.
+
+    With ``max_retries == 0`` (the default) the bus is the original
+    one-shot broadcast: a dropped message is lost for the phase. With
+    retries, a sender whose copy was dropped retransmits after an
+    exponential backoff — ``base_backoff * backoff_factor**attempt``,
+    capped at ``max_backoff`` — as long as the resend still fits inside
+    the phase deadline. ``gossip`` adds one pull-based anti-entropy pass
+    per exchange: receivers that got a payload forward it to live peers
+    that missed every direct copy (one forwarding attempt per missing
+    pair, subject to the same link loss), which is how reveal quorums
+    survive drop rates that defeat even the retransmitting sender."""
+
+    max_retries: int = 0
+    base_backoff: float = 4.0     # ms before the first retransmission
+    backoff_factor: float = 2.0
+    max_backoff: float = 40.0     # ms cap on a single backoff step
+    gossip: bool = False
+
+    def __post_init__(self) -> None:
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {self.max_retries}")
+        if self.base_backoff < 0 or self.max_backoff < 0:
+            raise ValueError("backoff delays must be >= 0")
+        if self.backoff_factor < 1.0:
+            raise ValueError(
+                f"backoff_factor must be >= 1 (non-shrinking schedule), "
+                f"got {self.backoff_factor}")
+
+    def backoff(self, attempt: int) -> float:
+        """Wait before retransmission number ``attempt + 1`` (ms)."""
+        return min(self.base_backoff * self.backoff_factor ** attempt,
+                   self.max_backoff)
+
+    def schedule(self, deadline_ms: float) -> List[float]:
+        """Send offsets (ms from phase start) of every attempt that fits
+        the deadline — attempt 0 at t=0, then each retransmission after
+        its backoff. Bounded by ``max_retries`` and the deadline."""
+        offsets, t = [0.0], 0.0
+        for attempt in range(self.max_retries):
+            t += self.backoff(attempt)
+            if t > deadline_ms:
+                break
+            offsets.append(t)
+        return offsets
+
 
 @dataclass(frozen=True)
 class NetworkConfig:
@@ -67,6 +128,7 @@ class NetworkConfig:
     churn: Tuple[ChurnSpec, ...] = ()
     timeouts: Mapping[str, float] = field(
         default_factory=lambda: dict(DEFAULT_TIMEOUTS))
+    retry: RetrySpec = RetrySpec()
 
 
 class SimNetwork:
@@ -80,6 +142,10 @@ class SimNetwork:
         self.now = 0.0
         self.round = 0
         self._seq = 0                 # heapq tie-break
+        # mid-phase crash faults: node -> first round it is back up
+        # (distinct from config.churn, which is scheduled at construction —
+        # these are imposed at runtime by SimEnv.execute_crash)
+        self.downed: Dict[int, int] = {}
         self.stats: Dict[str, Dict[str, int]] = {}
         # senders of the most recent exchange, ordered by earliest
         # network-wide delivery — the bus's stand-in for the permissioned
@@ -103,7 +169,15 @@ class SimNetwork:
     def alive(self) -> Set[int]:
         down = {c.node for c in self.config.churn
                 if c.down_from <= self.round < c.down_until}
+        down |= {n for n, up_round in self.downed.items()
+                 if self.round < up_round}
         return set(range(self.n_nodes)) - down
+
+    def force_down(self, node: int, until_round: int) -> None:
+        """Crash ``node`` now; it is down until the start of round
+        ``until_round`` (imposed mid-round by a :class:`SimEnv` crash
+        fault, on top of any scheduled churn)."""
+        self.downed[node] = max(until_round, self.downed.get(node, 0))
 
     def group_of(self, i: int) -> int:
         """Partition group index of node i this round (0 = no partition)."""
@@ -127,19 +201,31 @@ class SimNetwork:
         return list(groups.values())
 
     # -- phase exchange ------------------------------------------------------
+    _STAT_KEYS = ("sent", "delivered", "dropped", "unreachable", "timed_out",
+                  "retransmits", "recovered", "gossip")
+
     def exchange(self, kind: str, payloads: Mapping[int, Any],
                  extra_delays: Optional[Mapping[int, float]] = None,
                  ) -> Dict[int, Dict[int, Any]]:
         """Broadcast each sender's payload to every other live node, then
         advance the clock to the phase deadline. Returns
         ``{receiver: {sender: payload}}`` for messages that were reachable,
-        not dropped, and arrived before the deadline — in arrival order,
-        which is the order receivers process them."""
+        not dropped (or recovered by retransmission/gossip, per
+        ``config.retry``), and arrived before the deadline — in arrival
+        order, which is the order receivers process them.
+
+        Stats per kind: ``unreachable`` counts partition/churn losses
+        (topology — no retransmission can help), ``dropped`` stochastic
+        link losses (each attempt, including retransmissions, draws
+        independently), ``retransmits`` resends after a drop,
+        ``recovered`` deliveries that needed at least one retransmission,
+        and ``gossip`` deliveries made by the anti-entropy pass."""
         link = self.config.link
+        retry = self.config.retry
         deadline = self.now + self.config.timeouts.get(kind, 60.0)
         stat = self.stats.setdefault(
-            kind, {"sent": 0, "delivered": 0, "dropped": 0, "timed_out": 0})
-        queue: List[Tuple[float, int, int, int, Any]] = []
+            kind, {k: 0 for k in self._STAT_KEYS})
+        queue: List[Tuple[float, int, int, int, int]] = []
         for sender in sorted(payloads):
             delay = (extra_delays or {}).get(sender, 0.0)
             for recv in sorted(self.alive()):
@@ -147,26 +233,45 @@ class SimNetwork:
                     continue
                 stat["sent"] += 1
                 if not self.reachable(sender, recv):
-                    stat["dropped"] += 1
+                    stat["unreachable"] += 1
                     continue
-                if link.drop_rate > 0 and self.rng.random() < link.drop_rate:
-                    stat["dropped"] += 1
-                    continue
-                at = (self.now + link.base_latency + delay
-                      + float(self.rng.exponential(link.jitter)))
-                self._seq += 1
-                heapq.heappush(queue,
-                               (at, self._seq, sender, recv, payloads[sender]))
+                # multi-attempt delivery: each drop triggers a backed-off
+                # retransmission while it still fits the phase deadline;
+                # the first surviving copy is the one that travels
+                send_at = self.now + delay
+                for attempt in range(retry.max_retries + 1):
+                    if attempt:
+                        stat["retransmits"] += 1
+                    if (link.drop_rate > 0
+                            and self.rng.random() < link.drop_rate):
+                        stat["dropped"] += 1
+                        send_at += retry.backoff(attempt)
+                        if send_at > deadline:
+                            break   # every later copy lands past the deadline
+                        continue
+                    at = (send_at + link.base_latency
+                          + float(self.rng.exponential(link.jitter)))
+                    self._seq += 1
+                    heapq.heappush(queue,
+                                   (at, self._seq, sender, recv, attempt))
+                    break
         deliveries: Dict[int, Dict[int, Any]] = {}
         first_arrival: Dict[int, float] = {}
+        arrival: Dict[Tuple[int, int], float] = {}   # (recv, sender) -> at
         while queue:
-            at, _, sender, recv, payload = heapq.heappop(queue)
+            at, _, sender, recv, attempt = heapq.heappop(queue)
             if at > deadline:
                 stat["timed_out"] += 1
                 continue
             stat["delivered"] += 1
+            if attempt:
+                stat["recovered"] += 1
             first_arrival.setdefault(sender, at)    # heap pops in time order
-            deliveries.setdefault(recv, {})[sender] = payload
+            arrival[(recv, sender)] = at
+            deliveries.setdefault(recv, {})[sender] = payloads[sender]
+        if retry.gossip:
+            self._gossip_pass(kind, payloads, deliveries, first_arrival,
+                              arrival, deadline, stat)
         # inclusion order: delivered senders by earliest arrival anywhere,
         # then never-delivered senders by id (they reach the chain last)
         self.last_order = sorted(first_arrival,
@@ -176,23 +281,75 @@ class SimNetwork:
         self.now = deadline
         return deliveries
 
+    def _gossip_pass(self, kind: str, payloads: Mapping[int, Any],
+                     deliveries: Dict[int, Dict[int, Any]],
+                     first_arrival: Dict[int, float],
+                     arrival: Dict[Tuple[int, int], float],
+                     deadline: float, stat: Dict[str, int]) -> None:
+        """One pull-based anti-entropy pass: every live peer that missed a
+        payload's direct copies pulls it from the earliest-holding
+        reachable receiver (one forwarding attempt per missing pair, same
+        link loss model). Mutates ``deliveries``/arrival maps in place."""
+        link = self.config.link
+        for sender in sorted(payloads):
+            holders = sorted(
+                (r for r in deliveries if sender in deliveries[r]),
+                key=lambda r: (arrival[(r, sender)], r))
+            if not holders:
+                continue            # nobody to pull from
+            for peer in sorted(self.alive()):
+                if peer == sender or sender in deliveries.get(peer, {}):
+                    continue
+                source = next((h for h in holders
+                               if self.reachable(h, peer)), None)
+                if source is None:
+                    stat["unreachable"] += 1
+                    continue
+                if link.drop_rate > 0 and self.rng.random() < link.drop_rate:
+                    stat["dropped"] += 1
+                    continue
+                at = (arrival[(source, sender)] + link.base_latency
+                      + float(self.rng.exponential(link.jitter)))
+                if at > deadline:
+                    stat["timed_out"] += 1
+                    continue
+                stat["gossip"] += 1
+                arrival[(peer, sender)] = at
+                deliveries.setdefault(peer, {})[sender] = payloads[sender]
+                if (sender not in first_arrival
+                        or at < first_arrival[sender]):
+                    first_arrival[sender] = at
+
     def tx_landed(self, kind: str, senders: Iterable[int],
                   quorum: int) -> Set[int]:
         """Which senders' on-chain transactions landed before the tally
         deadline. The permissioned chain lives wherever a quorum of live
         nodes can talk to each other, so a transaction lands iff its sender
         sits in (or can reach) a component of ≥ quorum nodes and the
-        submission itself isn't dropped."""
+        submission itself isn't dropped — a ``RetrySpec`` grants each
+        sender its retransmission attempts here too."""
         quorate = [c for c in self.components() if len(c) >= quorum]
         chain_nodes: Set[int] = set().union(*quorate) if quorate else set()
         drop = self.config.link.drop_rate
+        attempts = self.config.retry.max_retries + 1
+        stat = self.stats.setdefault(kind, {k: 0 for k in self._STAT_KEYS})
         landed = set()
         for i in sorted(set(senders)):
+            stat["sent"] += 1
             if i not in chain_nodes:
+                stat["unreachable"] += 1
                 continue
-            if drop > 0 and self.rng.random() < drop:
-                continue
-            landed.add(i)
+            for attempt in range(attempts):
+                if attempt:
+                    stat["retransmits"] += 1
+                if drop > 0 and self.rng.random() < drop:
+                    stat["dropped"] += 1
+                    continue
+                landed.add(i)
+                stat["delivered"] += 1
+                if attempt:
+                    stat["recovered"] += 1
+                break
         self.now += self.config.timeouts.get(kind, 60.0)
         return landed
 
@@ -225,6 +382,14 @@ class SimEnv:
                         f"adversary {type(adv).__name__} names unknown node "
                         f"{adv.node_id} (n_nodes={n})")
                 self._by_node[adv.node_id] = adv
+        # mid-phase crash/restart faults (CrashRestart) — benign, so they
+        # never count toward adversary_ids/honest_ids, but SimEnv drives
+        # their crash, recovery-path restart, and rejoin
+        self._crash_specs: List[Any] = [
+            a for a in adversaries if getattr(a, "crash_fault", False)]
+        self._fired_crashes: Set[int] = set()        # id(spec) of used specs
+        self._pending_rejoin: Dict[int, int] = {}    # node -> rejoin round
+        self.recoveries = 0          # WAL restarts + ledger-resync rejoins
         self.events: List[Dict[str, Any]] = []
         self.round_logs: List[Dict[str, Any]] = []
         # every block hash any honest node held at each height, accumulated
@@ -235,16 +400,29 @@ class SimEnv:
 
     # -- wiring --------------------------------------------------------------
     def bind(self, consensus: Any) -> None:
-        """Attach the consensus driver whose ledgers/keys this env observes."""
+        """Attach the consensus driver whose ledgers/keys this env observes.
+
+        Crash faults with ``amnesia=True`` lose their durable state here:
+        the node's WAL is detached, so a restart replays nothing and its
+        fresh re-commit is an (attributable) equivocation."""
         self._consensus = consensus
+        hcds = getattr(consensus, "hcds_nodes", None)
+        for spec in self._crash_specs:
+            if spec.amnesia and spec.node_id is not None and hcds is not None:
+                hcds[spec.node_id].wal = None
+                getattr(consensus, "wals", {}).pop(spec.node_id, None)
 
     @property
     def adversary_ids(self) -> Set[int]:
-        return set(self._by_node)
+        # crash faults are registered per-node but are benign (byzantine
+        # = False): a node that merely crashed and recovered must stay in
+        # the honest safety/leadership accounting
+        return {i for i, a in self._by_node.items()
+                if getattr(a, "byzantine", True)}
 
     def honest_ids(self) -> List[int]:
-        return [i for i in range(self.network.n_nodes)
-                if i not in self._by_node]
+        adv = self.adversary_ids
+        return [i for i in range(self.network.n_nodes) if i not in adv]
 
     def plagiarist_ids(self) -> Set[int]:
         return {i for i, a in self._by_node.items()
@@ -323,9 +501,80 @@ class SimEnv:
     def note(self, event: str, **data: Any) -> None:
         self.events.append({"event": event, **data})
 
+    # -- crash/restart faults ------------------------------------------------
+    def crash_at(self, node: int, point: str, round: int) -> Optional[Any]:
+        """The unfired :class:`~repro.sim.adversary.CrashRestart` spec (if
+        any) that kills ``node`` at phase boundary ``point`` this round.
+        Role specs (``node_id=None``) match whichever node reaches the
+        boundary — e.g. whoever was elected leader."""
+        for spec in self._crash_specs:
+            if spec.at != point or spec.in_round != round:
+                continue
+            if spec.node_id is not None and spec.node_id != node:
+                continue
+            if id(spec) in self._fired_crashes:
+                continue
+            return spec
+        return None
+
+    def execute_crash(self, spec: Any, node: int) -> bool:
+        """Kill ``node`` per ``spec``: its volatile HCDS state is wiped on
+        the spot. ``down_rounds == 0`` models a fast reboot within the
+        same phase — the node comes back immediately through the recovery
+        path (WAL replay, or nothing under amnesia) and the caller may let
+        it resume; otherwise the node stays down and rejoins (ledger
+        re-sync + WAL replay) at the start of round
+        ``round + down_rounds``. Returns True iff the node is back up
+        within the current phase."""
+        from repro.core import recovery
+        self._fired_crashes.add(id(spec))
+        self.note("node_crashed", round=self.network.round, node=node,
+                  at=spec.at, amnesia=spec.amnesia)
+        hnode = (self._consensus.hcds_nodes[node]
+                 if self._consensus is not None else None)
+        if hnode is not None:
+            recovery.wipe_volatile(hnode)
+        if spec.down_rounds <= 0:
+            replayed = 0
+            if hnode is not None and getattr(hnode, "wal", None) is not None:
+                replayed = recovery.replay_wal(hnode, hnode.wal)
+            self.recoveries += 1
+            self.note("node_restarted", round=self.network.round, node=node,
+                      wal_records=replayed, amnesia=spec.amnesia)
+            return True
+        until = self.network.round + spec.down_rounds
+        self.network.force_down(node, until)
+        self._pending_rejoin[node] = max(
+            until, self._pending_rejoin.get(node, 0))
+        return False
+
+    def _rejoin(self, node: int, k: int) -> None:
+        """The recovery path for a node whose downtime just ended: replay
+        its protocol WAL into fresh HCDS state, then catch its ledger up
+        from the best reachable peer chain."""
+        from repro.core import recovery
+        replayed = adopted = 0
+        if self._consensus is not None:
+            hnode = self._consensus.hcds_nodes[node]
+            recovery.wipe_volatile(hnode)
+            if getattr(hnode, "wal", None) is not None:
+                replayed = recovery.replay_wal(hnode, hnode.wal)
+            peers = [self._consensus.ledgers[j]
+                     for j in self.reachable_peers(node)]
+            adopted = recovery.rejoin_ledger(
+                self._consensus.ledgers[node], peers,
+                self._consensus.public_keys)
+        self.recoveries += 1
+        self.note("node_rejoined", round=k, node=node,
+                  wal_records=replayed, blocks_adopted=adopted)
+
     # -- round bookkeeping ---------------------------------------------------
     def begin_round(self, k: int) -> None:
         self.network.set_round(k)
+        for node in sorted(self._pending_rejoin):
+            if self._pending_rejoin[node] <= k:
+                del self._pending_rejoin[node]
+                self._rejoin(node, k)
 
     def end_round(self, k: int, metrics: Any, aborted: bool) -> None:
         from repro.sim.report import snapshot_round
@@ -337,11 +586,12 @@ class SimEnv:
         """Heal every fault, run the final catch-up sync among honest
         nodes, and assemble the :class:`~repro.sim.report.ScenarioReport`."""
         from repro.sim.report import build_report
-        # heal: advance past every partition/churn window
+        # heal: advance past every partition/churn/forced-down window
         last_fault = max(
             [s.end_round for s in self.network.config.partitions]
             + [c.down_until for c in self.network.config.churn
-               if c.down_until < (1 << 30)] + [0])
+               if c.down_until < (1 << 30)]
+            + list(self.network.downed.values()) + [0])
         self.network.set_round(max(self.network.round + 1, last_fault))
         self._final_sync()
         return build_report(self, scenario, seed, rounds_requested)

@@ -63,6 +63,13 @@ class ScenarioReport:
     # envelopes the batch signature verification rejected, with attribution
     # (the message-layer forgery count — see repro.core.envelope)
     rejected_envelopes: int = 0
+    # reliability layer (RetrySpec retransmission + gossip — see
+    # repro.sim.network) and crash recovery (repro.core.recovery)
+    retransmits: int = 0              # resends after a stochastic drop
+    recovered_deliveries: int = 0     # deliveries that needed a retransmit
+    gossip_deliveries: int = 0        # deliveries made by anti-entropy
+    recoveries: int = 0               # WAL restarts + ledger-resync rejoins
+    equivocations_detected: int = 0   # attributed cross-restart double-signs
     rounds: List[RoundReport] = field(default_factory=list)
     events: List[Dict[str, Any]] = field(default_factory=list)
     net_stats: Dict[str, Dict[str, int]] = field(default_factory=dict)
@@ -81,6 +88,9 @@ class ScenarioReport:
                 f"honest_leader_rate={self.honest_leader_rate:.2f}, "
                 f"reelections={self.reelections}, "
                 f"rejected_envelopes={self.rejected_envelopes}, "
+                f"retransmits={self.retransmits}, "
+                f"recoveries={self.recoveries}, "
+                f"equivocations={self.equivocations_detected}, "
                 f"rounds_to_recover={self.rounds_to_recover}, "
                 f"converged={self.converged}")
 
@@ -181,6 +191,16 @@ def build_report(env, scenario: str, seed: int,
         final_heads=final_heads,
         rejected_envelopes=sum(1 for e in env.events
                                if e.get("event") == "envelope_rejected"),
+        retransmits=sum(s.get("retransmits", 0)
+                        for s in env.network.stats.values()),
+        recovered_deliveries=sum(s.get("recovered", 0)
+                                 for s in env.network.stats.values()),
+        gossip_deliveries=sum(s.get("gossip", 0)
+                              for s in env.network.stats.values()),
+        recoveries=int(getattr(env, "recoveries", 0)),
+        equivocations_detected=sum(
+            1 for e in env.events
+            if e.get("event") == "equivocation_detected"),
         rounds=logs,
         events=list(env.events),
         net_stats={k: dict(v) for k, v in env.network.stats.items()},

@@ -82,7 +82,15 @@ def main(argv: Optional[list] = None) -> int:
     reports: Dict[str, Any] = {}
     failures = 0
     for name in names:
-        report = run_scenario(name, seed=args.seed)
+        try:
+            report = run_scenario(name, seed=args.seed)
+        except Exception as e:
+            # a scenario that blows up mid-run is one FAIL row in the
+            # sweep, not a traceback that aborts every scenario after it
+            failures += 1
+            reports[name] = {"error": f"{type(e).__name__}: {e}"}
+            print(f"FAIL {name}: raised {type(e).__name__}: {e}")
+            continue
         reports[name] = report.to_dict()
         ok = (report.liveness and report.safety_violations == 0
               and report.converged)

@@ -19,10 +19,10 @@ from dataclasses import dataclass, field
 from typing import Dict, Tuple
 
 from repro.sim.adversary import (Adversary, BriberyVoter, CommitWithholder,
-                                 EnvelopeForger, LazyLeader, LeaderCrash,
-                                 Plagiarist, RevealEquivocator)
+                                 CrashRestart, EnvelopeForger, LazyLeader,
+                                 LeaderCrash, Plagiarist, RevealEquivocator)
 from repro.sim.network import (ChurnSpec, LinkSpec, NetworkConfig,
-                               PartitionSpec)
+                               PartitionSpec, RetrySpec)
 
 
 @dataclass(frozen=True)
@@ -163,6 +163,47 @@ register(Scenario(
     rounds=3,
     n_nodes=4,
     adversaries=(Plagiarist(3),),
+))
+
+register(Scenario(
+    name="lossy_wan_retry",
+    description="Every link drops 40% of messages — far past what the "
+                "one-shot bus survives (expected reveal quorum < 2N/3, "
+                "rounds abort). Bounded-backoff retransmission plus one "
+                "anti-entropy gossip pass keeps every quorum alive.",
+    rounds=5,
+    net=NetworkConfig(link=LinkSpec(base_latency=5.0, jitter=4.0,
+                                    drop_rate=0.4),
+                      retry=RetrySpec(max_retries=3, base_backoff=4.0,
+                                      backoff_factor=2.0, gossip=True)),
+))
+
+register(Scenario(
+    name="crash_restart",
+    description="Mid-phase crash/restart with durable WALs: node 3 "
+                "fast-reboots inside round 1's commit→reveal window (WAL "
+                "replay re-issues the identical commit), node 4 crashes "
+                "after voting in round 2 and rejoins one round later via "
+                "ledger re-sync, and round 3's elected leader dies after "
+                "minting but before broadcast — peers re-elect; the "
+                "signed block exists only in the dead leader's WAL.",
+    rounds=6,
+    adversaries=(CrashRestart(3, at="after_commit", round=1, down_rounds=0),
+                 CrashRestart(4, at="after_vote", round=2, down_rounds=1),
+                 CrashRestart(None, at="after_mint", round=3,
+                              down_rounds=1)),
+))
+
+register(Scenario(
+    name="amnesia_restart",
+    description="Node 5 fast-reboots inside round 1's commit window with "
+                "NO WAL: it re-commits under a fresh nonce for a round it "
+                "already committed — honest peers detect and attribute "
+                "the commit-equivocation and the round completes without "
+                "it (detection, not a crash).",
+    rounds=4,
+    adversaries=(CrashRestart(5, at="after_commit", round=1, down_rounds=0,
+                              amnesia=True),),
 ))
 
 register(Scenario(
