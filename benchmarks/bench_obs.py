@@ -1,0 +1,123 @@
+"""Tracer overhead pin: `repro.obs` must be free when off, cheap when on.
+
+Runs the same small-but-complete ``run_bhfl`` task (MLP FEL + five-phase
+PoFEL consensus, every instrumented subsystem on the path) twice per
+repeat — once under the default :class:`NullRecorder` and once under a
+buffering :class:`TraceRecorder` — and compares median wall times. The
+pin: full tracing costs < 5% of a round (the instrumentation sits on
+``rec.enabled`` fast paths, and span/event emission is list appends).
+
+A warmup run pays the jit compiles for both variants before timing, so
+the comparison measures steady-state rounds, not compilation.
+
+CLI::
+
+    PYTHONPATH=src python -m benchmarks.bench_obs --fast \
+        --json benchmarks/BENCH_obs.json
+
+Exits non-zero when the overhead pin fails (``--no-check`` disables).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+from pathlib import Path
+
+from benchmarks.common import emit
+
+THRESHOLD = 0.05        # traced may cost at most 5% over untraced
+
+ROUNDS = 3
+REPEATS = 5
+FAST_ROUNDS = 2
+FAST_REPEATS = 3
+
+
+def _run_once(rec, data, rounds: int, seed: int):
+    from repro import api, obs
+    with obs.use_recorder(rec):
+        t0 = time.perf_counter()
+        run = api.run_bhfl(model="mlp", n_nodes=4, clients_per_node=2,
+                           fel_iterations=1, rounds=rounds, data=data,
+                           seed=seed)
+        wall = time.perf_counter() - t0
+    return wall, run
+
+
+def measure(rounds: int = ROUNDS, repeats: int = REPEATS,
+            seed: int = 0) -> dict:
+    from repro import api, obs
+    data = api.make_mnist_like(n_train=400, n_test=120)
+
+    # warmup: trace/compile every jit bucket both paths will touch
+    _run_once(obs.NullRecorder(), data, rounds, seed)
+    _run_once(obs.TraceRecorder("warmup"), data, rounds, seed)
+
+    null_s, traced_s = [], []
+    last_rec = None
+    for r in range(repeats):
+        wall, _ = _run_once(obs.NullRecorder(), data, rounds, seed)
+        null_s.append(wall)
+        last_rec = obs.TraceRecorder(f"rep{r}")
+        wall, run = _run_once(last_rec, data, rounds, seed)
+        traced_s.append(wall)
+        assert run.obs is not None   # traced run rolled up its metrics
+
+    null_med = statistics.median(null_s)
+    traced_med = statistics.median(traced_s)
+    overhead = (traced_med - null_med) / null_med
+    return {
+        "bench": "obs",
+        "seed": seed,
+        "rounds": rounds,
+        "repeats": repeats,
+        "null_median_s": round(null_med, 4),
+        "traced_median_s": round(traced_med, 4),
+        "overhead_frac": round(overhead, 4),
+        "threshold": THRESHOLD,
+        "ok": overhead < THRESHOLD,
+        "spans_per_run": len(last_rec.spans),
+        "events_per_run": len(last_rec.events),
+        "counters": last_rec.metrics_snapshot()["counters"],
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer rounds/repeats (CI smoke)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the result as JSON (BENCH_obs.json)")
+    ap.add_argument("--no-check", action="store_true",
+                    help="report only; never fail on the overhead pin")
+    args = ap.parse_args()
+
+    rounds = FAST_ROUNDS if args.fast else ROUNDS
+    repeats = FAST_REPEATS if args.fast else REPEATS
+    res = measure(rounds=rounds, repeats=repeats, seed=args.seed)
+    res["fast"] = args.fast
+
+    emit("obs/null_run", res["null_median_s"] * 1e6,
+         f"rounds={rounds}")
+    emit("obs/traced_run", res["traced_median_s"] * 1e6,
+         f"spans={res['spans_per_run']} events={res['events_per_run']}")
+    emit("obs/overhead", res["overhead_frac"] * 100.0,
+         f"pin<{THRESHOLD * 100:.0f}% ok={res['ok']}")
+
+    if args.json:
+        Path(args.json).write_text(json.dumps(res, indent=2) + "\n")
+        print(f"wrote {args.json}")
+
+    if not res["ok"] and not args.no_check:
+        print(f"FAIL: tracer overhead {res['overhead_frac'] * 100:.1f}% "
+              f"exceeds the {THRESHOLD * 100:.0f}% pin")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -35,7 +35,7 @@ from repro.analysis.baseline import (BaselineEntry, BaselineError,
                                      apply_baseline, load_baseline,
                                      save_baseline)
 from repro.analysis.checkers import (ALL_RULES, consttime, determinism,
-                                     domains, tracing)
+                                     domains, obshooks, tracing)
 from repro.analysis.core import (FileContext, Finding, Rule, apply_noqa,
                                  collect_files, file_scopes,
                                  noqa_directives)
@@ -93,6 +93,7 @@ def analyze_contexts(contexts: Sequence[FileContext],
     for ctx in contexts:
         per_file: List[Finding] = []
         per_file.extend(determinism.check(ctx))
+        per_file.extend(obshooks.check(ctx))
         per_file.extend(consttime.check(ctx))
         per_file.extend(tracing.check(ctx))
         per_file.extend(domains.check_file(ctx, registry))

@@ -1,11 +1,12 @@
-"""The four RA rule families. Each module exposes ``RULES`` (metadata)
+"""The five RA rule families. Each module exposes ``RULES`` (metadata)
 and either ``check(ctx)`` (per-file) or, for the registry-driven domain
 checker, ``check_file(ctx, registry)`` plus ``KindRegistry.build``."""
 
 from repro.analysis.checkers import (consttime, determinism, domains,
-                                     tracing)
+                                     obshooks, tracing)
 
-ALL_RULES = (determinism.RULES + consttime.RULES + tracing.RULES
-             + domains.RULES)
+ALL_RULES = (determinism.RULES + obshooks.RULES + consttime.RULES
+             + tracing.RULES + domains.RULES)
 
-__all__ = ["consttime", "determinism", "domains", "tracing", "ALL_RULES"]
+__all__ = ["consttime", "determinism", "domains", "obshooks", "tracing",
+           "ALL_RULES"]

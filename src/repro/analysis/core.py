@@ -76,6 +76,8 @@ class Finding:
 #   crypto     — the constant-time surface: repro/core/crypto plus the
 #                commitment/envelope verify paths (hcds.py, envelope.py,
 #                phases.py)
+#   obs        — the observability package (repro/obs): hook/recorder code
+#                that must stay read-only w.r.t. protocol state (RA15x)
 #   src        — first-party package code (not tests, not fixtures)
 #   tests      — test files (some rules stay quiet here by design)
 
@@ -103,6 +105,8 @@ def file_scopes(rel_path: str) -> frozenset:
     if _has_run(parts, ("repro", "core", "crypto")) or (
             _has_run(parts, ("repro", "core")) and p.name in _CRYPTO_FILES):
         scopes.add("crypto")
+    if _has_run(parts, ("repro", "obs")):
+        scopes.add("obs")
     if any(part == "tests" for part in parts) or p.name.startswith("test_"):
         scopes.add("tests")
     else:

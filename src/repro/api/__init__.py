@@ -53,6 +53,7 @@ from repro.fl.hfl_runtime import (AllNodesPlagiarizeError, BHFLConfig,
                                   BHFLRuntime, RoundMetrics)
 from repro.fl.hierarchy import build_hierarchy
 from repro.fl.sharded_consensus import ShardedModelEvaluation
+from repro.obs import get_recorder
 from repro.fl.task import (LearningTask, RewardLedger, TaskAgreement,
                            negotiate_task)
 
@@ -82,6 +83,8 @@ class BHFLRun:
     history: List[RoundMetrics] = field(default_factory=list)
     # set when the run was driven through a repro.sim scenario/fault env
     scenario_report: Optional[Any] = None
+    # metrics rollup from the active obs recorder (None when tracing off)
+    obs: Optional[Dict[str, Any]] = None
 
     @property
     def chain_height(self) -> int:
@@ -341,4 +344,7 @@ def run_bhfl(task: Optional[LearningTask] = None,
         run.scenario_report = env.finalize(
             scenario=sc.name if sc is not None else "custom",
             seed=seed, rounds_requested=len(runtime.history))
+    rec = get_recorder()
+    if rec.enabled:
+        run.obs = rec.metrics_snapshot()
     return run

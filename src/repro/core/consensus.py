@@ -33,6 +33,8 @@ from repro.core.phases import (BlockMint, CommitReveal, ConsensusPhase,
                                ModelEvaluation, PhaseHook, RoundContext,
                                Tally, VoteCollection, VoteHook, run_phases)
 from repro.core.recovery import NodeWAL
+from repro.obs import get_recorder, phase_span_after, phase_span_before
+from repro.obs import sim_now as _sim_now
 
 
 @dataclass
@@ -97,6 +99,12 @@ class PoFELConsensus:
         self.phases: List[ConsensusPhase] = self.default_phases()
         self._before_hooks: Dict[str, List[PhaseHook]] = {}
         self._after_hooks: Dict[str, List[PhaseHook]] = {}
+        # span tracing rides the public hook seam like any other observer;
+        # "*" hooks run after named ones on both sides, so the before-span
+        # opens just ahead of phase.run and the after-span closes last —
+        # named user hooks execute inside the phase span
+        self.add_phase_hook("*", phase_span_before, when="before")
+        self.add_phase_hook("*", phase_span_after, when="after")
 
     def default_phases(self) -> List[ConsensusPhase]:
         """Alg. 1 as five composable stages."""
@@ -160,8 +168,22 @@ class PoFELConsensus:
             vote_hook=vote_hook,
             env=env,
         )
-        run_phases(self.phases, ctx,
-                   before=self._before_hooks, after=self._after_hooks)
+        rec = get_recorder()
+        rec.open_span("consensus", cat="consensus", round=ctx.round,
+                      sim_now=_sim_now(env))
+        depth = rec.depth()
+        try:
+            run_phases(self.phases, ctx,
+                       before=self._before_hooks, after=self._after_hooks)
+        except Exception as exc:
+            # after-hooks never fire for a raising phase, so its span (and
+            # the consensus span) would stay open — close them with the
+            # error attached so aborted rounds still appear in the trace
+            rec.unwind(depth, error=type(exc).__name__)
+            rec.close_span(sim_now=_sim_now(env),
+                           error=type(exc).__name__)
+            raise
+        rec.close_span(sim_now=_sim_now(env))
         self.round += 1
         # gw(k) stays whatever ME produced (a device array on the jitted
         # paths) — adopting it must not force a host roundtrip; callers

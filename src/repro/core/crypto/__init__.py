@@ -51,6 +51,7 @@ import contextlib
 import hashlib
 import hmac
 import os
+import time
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, Iterator, List, NamedTuple, Optional, Sequence, Tuple
@@ -58,6 +59,7 @@ from typing import Dict, Iterator, List, NamedTuple, Optional, Sequence, Tuple
 from repro.core.crypto import curve, field
 from repro.core.crypto.backends.python import (BatchOps, CurveOps, NaiveOps,
                                                WindowedOps, rlc_coefficient)
+from repro.obs import get_recorder
 
 # ---------------------------------------------------------------------------
 # Back-compat re-exports: the pre-package module exposed these names, and
@@ -362,6 +364,26 @@ def verify_batch(items: Sequence[BatchItem],
     The acceptance predicate is identical across backends: an item passes
     iff ``dverify`` passes it individually.
     """
+    rec = get_recorder()
+    if not rec.enabled:
+        return _verify_batch_impl(items, backend)
+    name = backend if backend is not None else _BACKEND
+    t0 = time.perf_counter()
+    with rec.span("crypto.verify_batch", cat="crypto",
+                  backend=name, items=len(items)):
+        result = _verify_batch_impl(items, backend)
+    rec.counter("crypto.verify_batch_calls")
+    rec.counter("crypto.verify_batch_items", len(items))
+    if result.bad:
+        rec.counter("crypto.verify_batch_forged", len(result.bad))
+    rec.observe("crypto.verify_batch_ms",
+                (time.perf_counter() - t0) * 1e3)
+    rec.observe("crypto.verify_batch_size", len(items))
+    return result
+
+
+def _verify_batch_impl(items: Sequence[BatchItem],
+                       backend: Optional[str] = None) -> BatchVerifyResult:
     name = backend if backend is not None else _BACKEND
     ops = _get_ops(name)
     items = list(items)

@@ -61,6 +61,7 @@ from ..curve import (JPoint, Point, affine_point_add, g_table, is_inf,
 from ..curve import N as _N
 from ..field import P as _P
 from .python import BatchOps, RLCItem, rlc_coefficient
+from repro.obs import get_recorder
 
 _LIMBS = 8
 _LBITS = 32
@@ -279,6 +280,12 @@ def _rlc_kernel(step_x, step_y, step_use):
 
 _rlc_kernel_jit = None
 
+# pow-2 lane counts the jitted kernel has already been traced for — the
+# first call in a new bucket pays XLA compilation, later calls only execute.
+# Tracked here (not in the recorder) so the compile/execute attribution is
+# correct across recorder swaps within one process.
+_COMPILED_LANE_BUCKETS: set = set()
+
 
 def _kernel():
     global _rlc_kernel_jit
@@ -309,6 +316,28 @@ class JaxOps(BatchOps):
     def rlc_check(self, group: Sequence[RLCItem]) -> bool:
         if len(group) < self.min_lanes:
             return super().rlc_check(group)
+        rec = get_recorder()
+        if rec.enabled:
+            return self._rlc_check_traced(group)
+        return self._rlc_check_jax(group)
+
+    def _rlc_check_traced(self, group: Sequence[RLCItem]) -> bool:
+        # the jit recompiles once per pow-2 lane bucket; splitting that
+        # first call out is the compile-vs-execute latency decomposition
+        rec = get_recorder()
+        L = _next_pow2(len(group))
+        compile_hit = L in _COMPILED_LANE_BUCKETS
+        with rec.span("crypto.rlc_jax", cat="crypto", group=len(group),
+                      lanes=L, compile=not compile_hit):
+            result = self._rlc_check_jax(group)
+        if not compile_hit:
+            _COMPILED_LANE_BUCKETS.add(L)
+            rec.counter("crypto.jax_lane_bucket_compiles")
+        rec.counter("crypto.rlc_jax_calls")
+        rec.observe("crypto.rlc_jax_lanes", L)
+        return result
+
+    def _rlc_check_jax(self, group: Sequence[RLCItem]) -> bool:
         coeffs = [rlc_coefficient() for _ in group]
         sg = 0
         L = _next_pow2(len(group))

@@ -28,6 +28,7 @@ from ..curve import (G, J_INF, Point, g_table, jc_add, jc_is_inf,
                      point_mul_windowed_jc, strauss_shamir)
 from ..curve import N as _N
 from ..field import P as _P
+from repro.obs import get_recorder
 
 # (u1, u2, PK, R): one prepared signature of the batch equation
 #     (Σ aᵢ·u1ᵢ)·G + Σ (aᵢ·u2ᵢ)·PKᵢ − Σ aᵢ·Rᵢ == ∞
@@ -93,6 +94,16 @@ class BatchOps(WindowedOps):
     batch_equation = True
 
     def rlc_check(self, group: Sequence[RLCItem]) -> bool:
+        rec = get_recorder()
+        if rec.enabled:
+            with rec.span("crypto.rlc_python", cat="crypto",
+                          group=len(group)):
+                result = self._rlc_check_python(group)
+            rec.counter("crypto.rlc_python_calls")
+            return result
+        return self._rlc_check_python(group)
+
+    def _rlc_check_python(self, group: Sequence[RLCItem]) -> bool:
         coeffs = [rlc_coefficient() for _ in group]
         sg = 0
         acc = J_INF

@@ -42,6 +42,7 @@ from repro.core.envelope import (SignedEnvelope, commit_signing_digest,
                                  digests_equal, tags_equal,
                                  verify_envelopes)
 from repro.core.serialization import serialize_pytree
+from repro.obs import get_recorder
 
 
 @dataclass(frozen=True)
@@ -294,29 +295,34 @@ def run_hcds_round(nodes: list[HCDSNode], models: list[Any], round: int,
     pks = public_keys or {n.node_id: n.keypair.public_key for n in nodes}
     if model_bytes is None:
         model_bytes = [serialize_pytree(m) for m in models]
-    commits = [n.commit(m, round, model_bytes=b)
-               for n, m, b in zip(nodes, models, model_bytes)]
-    batch = verify_envelopes([c.envelope for c in commits], pks)
-    if not batch.ok:
-        forged = batch.bad_senders([c.envelope for c in commits])
-        raise RuntimeError(f"honest commit rejected: forged envelope from "
-                           f"node(s) {forged}")
-    for c in commits:
-        for n in nodes:
-            if n.node_id != c.node_id:
-                res = n.receive_commit(c, pks[c.node_id], verified=True)
-                if not res.accepted:
-                    raise RuntimeError(
-                        f"honest commit rejected: {c.node_id}->{n.node_id}: {res.reason}")
-    for n in nodes:                     # the commit/reveal barrier (Alg. 2)
-        n.finalize_commit_stage(round)
-    reveals = [n.reveal(round) for n in nodes]
-    digests = {r.node_id: crypto.sha256_digest(r.nonce, r.model_bytes)
-               for r in reveals}
-    out: dict[int, dict[int, HCDSResult]] = {n.node_id: {} for n in nodes}
-    for r in reveals:
-        for n in nodes:
-            if n.node_id != r.node_id:
-                out[n.node_id][r.node_id] = n.receive_reveal(
-                    r, pks[r.node_id], digest=digests[r.node_id])
+    rec = get_recorder()
+    with rec.span("hcds:commit_stage", cat="hcds", round=round,
+                  n_nodes=len(nodes)):
+        commits = [n.commit(m, round, model_bytes=b)
+                   for n, m, b in zip(nodes, models, model_bytes)]
+        batch = verify_envelopes([c.envelope for c in commits], pks)
+        if not batch.ok:
+            forged = batch.bad_senders([c.envelope for c in commits])
+            raise RuntimeError(f"honest commit rejected: forged envelope from "
+                               f"node(s) {forged}")
+        for c in commits:
+            for n in nodes:
+                if n.node_id != c.node_id:
+                    res = n.receive_commit(c, pks[c.node_id], verified=True)
+                    if not res.accepted:
+                        raise RuntimeError(
+                            f"honest commit rejected: {c.node_id}->{n.node_id}: {res.reason}")
+        for n in nodes:                 # the commit/reveal barrier (Alg. 2)
+            n.finalize_commit_stage(round)
+    with rec.span("hcds:reveal_stage", cat="hcds", round=round,
+                  n_nodes=len(nodes)):
+        reveals = [n.reveal(round) for n in nodes]
+        digests = {r.node_id: crypto.sha256_digest(r.nonce, r.model_bytes)
+                   for r in reveals}
+        out: dict[int, dict[int, HCDSResult]] = {n.node_id: {} for n in nodes}
+        for r in reveals:
+            for n in nodes:
+                if n.node_id != r.node_id:
+                    out[n.node_id][r.node_id] = n.receive_reveal(
+                        r, pks[r.node_id], digest=digests[r.node_id])
     return out

@@ -49,6 +49,7 @@ from repro.core.hcds import HCDSNode, run_hcds_round
 from repro.core.model_eval import (MEResult, make_predictions,
                                    model_evaluation_pytrees)
 from repro.core.serialization import serialize_pytree
+from repro.obs import get_recorder
 
 # (node_id, honest_vote, honest_predictions) -> (vote, predictions)
 VoteHook = Callable[[int, int, np.ndarray], tuple[int, np.ndarray]]
@@ -166,7 +167,13 @@ class CommitReveal(ConsensusPhase):
                 if res.evicted is not None:
                     # the plagiarism tie-break retroactively rejected an
                     # earlier-arrived copy from a later committer
-                    ctx.rejected.setdefault(res.evicted, "plagiarized-model")
+                    if res.evicted not in ctx.rejected:
+                        ctx.rejected[res.evicted] = "plagiarized-model"
+                        # ideal mode has no env to note() through — emit
+                        # the attributed audit event on the recorder
+                        get_recorder().event("plagiarism_evicted",
+                                             round=ctx.round,
+                                             node=res.evicted)
 
     def _run_networked(self, ctx: RoundContext,
                        model_bytes: List[bytes]) -> None:
@@ -296,8 +303,10 @@ class CommitReveal(ConsensusPhase):
                         # tie-break eviction: this receiver no longer holds
                         # the later committer's identical reveal
                         holders.get(res.evicted, set()).discard(recv)
-                        ctx.rejected.setdefault(res.evicted,
-                                                "plagiarized-model")
+                        if res.evicted not in ctx.rejected:
+                            ctx.rejected[res.evicted] = "plagiarized-model"
+                            env.note("plagiarism_evicted", round=ctx.round,
+                                     node=res.evicted)
                 elif (res.reason != "no-commitment"
                       and sender not in ctx.rejected):
                     # 'no-commitment' only means this receiver missed the

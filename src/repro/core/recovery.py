@@ -48,6 +48,7 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 from repro.blockchain.ledger import (InvalidBlock, Ledger, _block_from_dict,
                                      _block_to_dict)
 from repro.core import crypto
+from repro.obs import get_recorder
 
 
 class WALConflict(RuntimeError):
@@ -123,6 +124,14 @@ class NodeWAL:
             return existing          # identical re-append: idempotent
         self._records.append(rec)
         self._index[(rec.kind, rec.round)] = rec
+        if write:
+            # only live appends are observable — re-loading an existing
+            # JSONL file at construction is not new protocol activity
+            obs = get_recorder()
+            if obs.enabled:
+                obs.counter("recovery.wal_appends")
+                obs.event("wal_append", round=rec.round, node=self.node_id,
+                          kind=rec.kind, durable=self.path is not None)
         if write and self.path is not None:
             with self.path.open("a") as f:
                 f.write(rec.to_json() + "\n")
@@ -203,6 +212,12 @@ def replay_wal(node: Any, wal: NodeWAL) -> int:
             digest=bytes.fromhex(rec.data["commitment"]),
             tag=crypto.Signature.coerce(rec.data["tag"]))
         applied += 1
+    obs = get_recorder()
+    if obs.enabled:
+        obs.counter("recovery.wal_replays")
+        obs.counter("recovery.wal_records_replayed", applied)
+        obs.event("wal_replay", node=wal.node_id, applied=applied,
+                  records=len(wal))
     return applied
 
 
@@ -229,6 +244,11 @@ class LedgerSnapshot:
 def snapshot_ledger(ledger: Ledger) -> LedgerSnapshot:
     payload = json.dumps([_block_to_dict(b) for b in ledger.blocks],
                          sort_keys=True)
+    obs = get_recorder()
+    if obs.enabled:
+        obs.counter("recovery.ledger_snapshots")
+        obs.event("ledger_snapshot", node=ledger.node_id,
+                  height=ledger.height)
     return LedgerSnapshot(
         node_id=ledger.node_id, height=ledger.height, head=ledger.head_hash,
         digest=LedgerSnapshot.payload_digest(payload), payload=payload)
@@ -254,6 +274,10 @@ def restore_ledger(snap: LedgerSnapshot,
     if public_keys is not None and not led.verify_chain(public_keys):
         raise InvalidBlock(
             f"restored chain for node {snap.node_id} fails verification")
+    obs = get_recorder()
+    if obs.enabled:
+        obs.counter("recovery.ledger_restores")
+        obs.event("ledger_restore", node=snap.node_id, height=snap.height)
     return led
 
 
@@ -316,4 +340,11 @@ def rejoin_ledger(ledger: Ledger, peer_ledgers: Sequence[Ledger],
         ledger.sync_from(best.blocks, public_keys)
     except InvalidBlock:
         ledger.fork_choice(best.blocks, public_keys)
-    return ledger.height - before
+    adopted = ledger.height - before
+    obs = get_recorder()
+    if obs.enabled:
+        obs.counter("recovery.ledger_rejoins")
+        obs.counter("recovery.blocks_adopted", adopted)
+        obs.event("ledger_rejoin", node=ledger.node_id, adopted=adopted,
+                  height=ledger.height)
+    return adopted

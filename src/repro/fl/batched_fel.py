@@ -44,6 +44,7 @@ matching shapes share compiles either way via the module cache.
 
 from __future__ import annotations
 
+import time
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Any, Callable, List, Optional, Tuple
@@ -54,6 +55,7 @@ import numpy as np
 
 from repro.core.serialization import flatten_pytree, unflatten_pytree_device
 from repro.fl.hierarchy import FELCluster
+from repro.obs import get_recorder
 
 
 def _next_pow2(x: int) -> int:
@@ -223,6 +225,10 @@ class BatchedFELEngine:
         key = (spec.per_example_loss, spec.lr, spec.momentum, spec.decay,
                self._uniform, self.batch_pad, unroll_steps, unroll_iters)
         fn = _ROUND_FN_CACHE.get(key)
+        rec = get_recorder()
+        if rec.enabled:
+            rec.counter("fel.round_fn_cache_hits" if fn is not None
+                        else "fel.round_fn_cache_misses")
         if fn is None:
             fn = jax.jit(_build_round_fn(spec, self._uniform, self.batch_pad,
                                          unroll_steps, unroll_iters))
@@ -268,11 +274,29 @@ class BatchedFELEngine:
             raise ValueError(
                 f"per-client seed overflows int32 (round_seed={round_seed}); "
                 "keep cfg.seed * 1000 + rounds within int32 range")
-        return self._round_fn(jnp.asarray(global_flat),
-                              jnp.asarray(idx),
-                              jnp.asarray(seeds, jnp.int32),
-                              self._data, self._sizes_f, self._bs_dev,
-                              self._stepmask, self._template)
+        rec = get_recorder()
+        if not rec.enabled:
+            return self._round_fn(jnp.asarray(global_flat),
+                                  jnp.asarray(idx),
+                                  jnp.asarray(seeds, jnp.int32),
+                                  self._data, self._sizes_f, self._bs_dev,
+                                  self._stepmask, self._template)
+        # dispatch only — jax execution is async, so this span measures
+        # trace/compile + program launch, not device runtime; ``compiled``
+        # marks dispatches that traced a fresh program (the jit-compile
+        # half of the compile-vs-execute split)
+        traces_before = _TRACE_COUNT[0]
+        t0 = time.perf_counter()
+        rec.open_span("fel.dispatch", cat="fel")
+        W = self._round_fn(jnp.asarray(global_flat),
+                           jnp.asarray(idx),
+                           jnp.asarray(seeds, jnp.int32),
+                           self._data, self._sizes_f, self._bs_dev,
+                           self._stepmask, self._template)
+        rec.close_span(compiled=_TRACE_COUNT[0] > traces_before)
+        rec.counter("fel.dispatches")
+        rec.observe("fel.dispatch_ms", (time.perf_counter() - t0) * 1e3)
+        return W
 
 
 def _build_round_fn(spec: BatchedTrainSpec, uniform: bool, B: int,

@@ -46,6 +46,7 @@ from repro.fl.adapters import MLPAdapter, ModelAdapter
 from repro.fl.fedavg import fedavg
 from repro.fl.hierarchy import FELCluster
 from repro.models.mlp import MLPConfig
+from repro.obs import get_recorder
 
 ENGINES = ("reference", "batched", "auto")
 
@@ -257,22 +258,32 @@ class BHFLRuntime:
                 f"all {cfg.n_nodes} nodes are plagiarists — at least one "
                 f"honest node must train a model for round {k}")
         env = self.env
+        rec = get_recorder()
+        # the top-level round span: its children (begin_round, fel, the
+        # consensus span opened inside run_round, adopt_global, evaluate,
+        # end_round) account for the round's wall time in the profiler
+        rec.open_span("round", cat="runtime", round=k, sim_env=env)
         down: set = set()
         if env is not None:
-            env.begin_round(k)
+            with rec.span("begin_round", round=k, sim_env=env):
+                env.begin_round(k)
             down = set(range(cfg.n_nodes)) - env.alive()
         round_seed = cfg.seed + k + 1
         sizes = [float(c.data_size) for c in self.clusters]
         try:
-            if self._engine is not None:
-                models = self._fel_models_batched(round_seed, down=down)
-            else:
-                models = self._fel_models_reference(round_seed, down=down)
+            with rec.span("fel", round=k, sim_env=env,
+                          engine=("batched" if self._engine is not None
+                                  else "reference")):
+                if self._engine is not None:
+                    models = self._fel_models_batched(round_seed, down=down)
+                else:
+                    models = self._fel_models_reference(round_seed, down=down)
             record = self.consensus.run_round(models, sizes,
                                               vote_hook=self.vote_hook,
                                               env=env)
         except QuorumNotReached as e:
             if env is None:     # impossible without fault injection
+                rec.close_span(error=type(e).__name__)
                 raise
             # liveness gap: no block this round; global model unchanged
             self.consensus.skip_round()
@@ -280,29 +291,40 @@ class BHFLRuntime:
             metrics = RoundMetrics(k, -1, float("nan"), float("nan"),
                                    float("nan"), None)
             self.history.append(metrics)
-            env.end_round(k, metrics, aborted=True)
+            with rec.span("end_round", round=k, sim_env=env):
+                env.end_round(k, metrics, aborted=True)
+            rec.close_span(sim_now=None, error="QuorumNotReached",
+                           aborted=True)
             return metrics
+        except BaseException as e:
+            rec.close_span(error=type(e).__name__)
+            raise
 
         # adopt gw(k) as the next global model
-        if self._engine is not None:
-            # stays on device: flat form is the canonical round state
-            # (bypass the syncing setter — both forms are set right here)
-            self._global_flat = jnp.asarray(record.global_model)
-            self._global_params = unflatten_pytree_device(self._global_flat,
-                                                          self.global_params)
-        else:
-            self.global_params = self.adapter.unflatten(record.global_model,
-                                                        self.global_params)
+        with rec.span("adopt_global", round=k, sim_env=env):
+            if self._engine is not None:
+                # stays on device: flat form is the canonical round state
+                # (bypass the syncing setter — both forms are set right here)
+                self._global_flat = jnp.asarray(record.global_model)
+                self._global_params = unflatten_pytree_device(
+                    self._global_flat, self.global_params)
+            else:
+                self.global_params = self.adapter.unflatten(
+                    record.global_model, self.global_params)
 
         acc, loss = float("nan"), float("nan")
         if self.test_set is not None:
-            acc, loss = self.adapter.evaluate(self.global_params, self.test_set)
+            with rec.span("evaluate", round=k, sim_env=env):
+                acc, loss = self.adapter.evaluate(self.global_params,
+                                                  self.test_set)
 
         metrics = RoundMetrics(k, record.leader_id, acc, loss,
                                float(np.mean(record.similarities)), record)
         self.history.append(metrics)
         if env is not None:
-            env.end_round(k, metrics, aborted=False)
+            with rec.span("end_round", round=k, sim_env=env):
+                env.end_round(k, metrics, aborted=False)
+        rec.close_span(aborted=False)
         return metrics
 
     def run(self, n_rounds: int) -> List[RoundMetrics]:

@@ -26,6 +26,8 @@ from typing import Any, Dict, Iterable, List, Mapping, Optional, Sequence, Set, 
 
 import numpy as np
 
+from repro.obs import get_recorder
+
 DEFAULT_TIMEOUTS: Mapping[str, float] = {
     "commit": 60.0, "reveal": 60.0, "vote": 60.0, "block": 90.0}
 
@@ -225,6 +227,17 @@ class SimNetwork:
         deadline = self.now + self.config.timeouts.get(kind, 60.0)
         stat = self.stats.setdefault(
             kind, {k: 0 for k in self._STAT_KEYS})
+        # observability: one span per exchange (sim endpoints = start of
+        # send → phase deadline) plus a per-message event stream. Every
+        # emission below happens on the deterministic path — sorted loops,
+        # seeded rng, heap order — so the event sequence is a pure function
+        # of the seed. Guarded so the disabled path stays allocation-free.
+        rec = get_recorder()
+        traced = rec.enabled
+        if traced:
+            rec.open_span("net:" + kind, cat="network", round=self.round,
+                          sim_now=self.now, kind=kind)
+            stat_before = dict(stat)
         queue: List[Tuple[float, int, int, int, int]] = []
         for sender in sorted(payloads):
             delay = (extra_delays or {}).get(sender, 0.0)
@@ -242,9 +255,17 @@ class SimNetwork:
                 for attempt in range(retry.max_retries + 1):
                     if attempt:
                         stat["retransmits"] += 1
+                        if traced:
+                            rec.event("net_retransmit", round=self.round,
+                                      node=sender, sim_ms=send_at, kind=kind,
+                                      recv=recv, attempt=attempt)
                     if (link.drop_rate > 0
                             and self.rng.random() < link.drop_rate):
                         stat["dropped"] += 1
+                        if traced:
+                            rec.event("net_drop", round=self.round,
+                                      node=sender, sim_ms=send_at, kind=kind,
+                                      recv=recv, attempt=attempt)
                         send_at += retry.backoff(attempt)
                         if send_at > deadline:
                             break   # every later copy lands past the deadline
@@ -259,13 +280,23 @@ class SimNetwork:
         first_arrival: Dict[int, float] = {}
         arrival: Dict[Tuple[int, int], float] = {}   # (recv, sender) -> at
         while queue:
-            at, _, sender, recv, attempt = heapq.heappop(queue)
+            at, bus_seq, sender, recv, attempt = heapq.heappop(queue)
             if at > deadline:
                 stat["timed_out"] += 1
+                if traced:
+                    rec.event("net_timeout", round=self.round, node=sender,
+                              sim_ms=at, kind=kind, recv=recv,
+                              bus_seq=bus_seq, attempt=attempt)
                 continue
             stat["delivered"] += 1
             if attempt:
                 stat["recovered"] += 1
+            if traced:
+                # emitted in heap-pop order (arrival time, bus seq) — the
+                # canonical event order the determinism pin replays
+                rec.event("net_delivery", round=self.round, node=recv,
+                          sim_ms=at, kind=kind, sender=sender,
+                          bus_seq=bus_seq, attempt=attempt)
             first_arrival.setdefault(sender, at)    # heap pops in time order
             arrival[(recv, sender)] = at
             deliveries.setdefault(recv, {})[sender] = payloads[sender]
@@ -279,6 +310,14 @@ class SimNetwork:
         self.last_order += [s for s in sorted(payloads)
                             if s not in first_arrival]
         self.now = deadline
+        if traced:
+            delta = {k: stat[k] - stat_before[k] for k in self._STAT_KEYS}
+            for k, v in delta.items():
+                if v:
+                    rec.counter(f"net.{kind}.{k}", v)
+            rec.event("net_exchange", round=self.round, sim_ms=deadline,
+                      kind=kind, **delta)
+            rec.close_span(sim_now=deadline, **delta)
         return deliveries
 
     def _gossip_pass(self, kind: str, payloads: Mapping[int, Any],
@@ -314,6 +353,11 @@ class SimNetwork:
                     stat["timed_out"] += 1
                     continue
                 stat["gossip"] += 1
+                rec = get_recorder()
+                if rec.enabled:
+                    rec.event("net_gossip_delivery", round=self.round,
+                              node=peer, sim_ms=at, kind=kind, sender=sender,
+                              source=source)
                 arrival[(peer, sender)] = at
                 deliveries.setdefault(peer, {})[sender] = payloads[sender]
                 if (sender not in first_arrival
@@ -334,7 +378,8 @@ class SimNetwork:
         attempts = self.config.retry.max_retries + 1
         stat = self.stats.setdefault(kind, {k: 0 for k in self._STAT_KEYS})
         landed = set()
-        for i in sorted(set(senders)):
+        sender_ids = sorted(set(senders))
+        for i in sender_ids:
             stat["sent"] += 1
             if i not in chain_nodes:
                 stat["unreachable"] += 1
@@ -351,6 +396,11 @@ class SimNetwork:
                     stat["recovered"] += 1
                 break
         self.now += self.config.timeouts.get(kind, 60.0)
+        rec = get_recorder()
+        if rec.enabled:
+            rec.event("net_tx_landed", round=self.round, sim_ms=self.now,
+                      kind=kind, landed=sorted(landed),
+                      submitted=len(sender_ids))
         return landed
 
 
@@ -499,7 +549,20 @@ class SimEnv:
         return self.network.tx_landed(kind, senders, self.quorum)
 
     def note(self, event: str, **data: Any) -> None:
+        """Record one environment observation.
+
+        This is the single emission point for protocol observations: the
+        same call feeds ``self.events`` (which ``build_report`` counts
+        into the ``ScenarioReport`` security totals) and the active obs
+        recorder's event stream — so the report counters and the exported
+        event log can never disagree."""
         self.events.append({"event": event, **data})
+        rec = get_recorder()
+        if rec.enabled:
+            attrs = dict(data)
+            rec.event(event, round=attrs.pop("round", None),
+                      node=attrs.pop("node", None),
+                      sim_ms=self.network.now, **attrs)
 
     # -- crash/restart faults ------------------------------------------------
     def crash_at(self, node: int, point: str, round: int) -> Optional[Any]:

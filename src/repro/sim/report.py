@@ -16,6 +16,7 @@ from typing import Any, Dict, List, Optional
 import numpy as np
 
 from repro.blockchain.block import block_hash
+from repro.obs import get_recorder
 
 
 @dataclass
@@ -70,9 +71,12 @@ class ScenarioReport:
     gossip_deliveries: int = 0        # deliveries made by anti-entropy
     recoveries: int = 0               # WAL restarts + ledger-resync rejoins
     equivocations_detected: int = 0   # attributed cross-restart double-signs
+    plagiarism_evictions: int = 0     # HCDS tie-break evictions, attributed
     rounds: List[RoundReport] = field(default_factory=list)
     events: List[Dict[str, Any]] = field(default_factory=list)
     net_stats: Dict[str, Dict[str, int]] = field(default_factory=dict)
+    # metrics rollup from the active obs recorder (empty when tracing off)
+    obs_metrics: Dict[str, Any] = field(default_factory=dict)
 
     def to_dict(self) -> Dict[str, Any]:
         return asdict(self)
@@ -201,7 +205,11 @@ def build_report(env, scenario: str, seed: int,
         equivocations_detected=sum(
             1 for e in env.events
             if e.get("event") == "equivocation_detected"),
+        plagiarism_evictions=sum(
+            1 for e in env.events
+            if e.get("event") == "plagiarism_evicted"),
         rounds=logs,
         events=list(env.events),
         net_stats={k: dict(v) for k, v in env.network.stats.items()},
+        obs_metrics=get_recorder().metrics_snapshot(),
     )

@@ -11,6 +11,13 @@ CLI (the CI scenario-smoke job)::
     PYTHONPATH=src python -m repro.sim --fast --json report.json
     PYTHONPATH=src python -m repro.sim --scenario leader_crash
     PYTHONPATH=src python -m repro.sim --list
+    PYTHONPATH=src python -m repro.sim --scenario byzantine_third \
+        --trace trace.json --events events.jsonl
+
+``--trace`` writes a Chrome/Perfetto trace of every scenario in the
+sweep (one process per scenario); ``--events`` the deterministic JSONL
+event log. Both flush whatever was captured even when a scenario FAILs
+mid-run — the partial trace is exactly the debugging artifact you want.
 """
 
 from __future__ import annotations
@@ -20,6 +27,7 @@ import json
 import sys
 from typing import Any, Dict, Optional, Union
 
+from repro import obs
 from repro.sim.network import SimEnv, SimNetwork
 from repro.sim.report import ScenarioReport
 from repro.sim.scenarios import (SCENARIOS, Scenario, get_scenario,
@@ -61,6 +69,12 @@ def main(argv: Optional[list] = None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None,
                     help="write all reports to this JSON file")
+    ap.add_argument("--trace", default=None,
+                    help="write a Chrome/Perfetto trace (trace_event JSON) "
+                         "of the sweep to this path")
+    ap.add_argument("--events", default=None,
+                    help="write the deterministic JSONL obs event log "
+                         "to this path")
     ap.add_argument("--list", action="store_true",
                     help="list registered scenarios and exit")
     args = ap.parse_args(argv)
@@ -79,18 +93,28 @@ def main(argv: Optional[list] = None) -> int:
     else:
         names = list(list_scenarios(include_slow=False))
 
+    tracing = bool(args.trace or args.events)
+    traces: list = []       # (scenario, TraceRecorder), FAIL rows included
     reports: Dict[str, Any] = {}
     failures = 0
     for name in names:
+        rec = obs.TraceRecorder(name) if tracing else obs.NullRecorder()
         try:
-            report = run_scenario(name, seed=args.seed)
+            with obs.use_recorder(rec):
+                report = run_scenario(name, seed=args.seed)
         except Exception as e:
             # a scenario that blows up mid-run is one FAIL row in the
-            # sweep, not a traceback that aborts every scenario after it
+            # sweep, not a traceback that aborts every scenario after it —
+            # and everything traced before the raise still gets flushed
             failures += 1
+            if tracing:
+                rec.unwind(0, error=type(e).__name__)
+                traces.append((name, rec))
             reports[name] = {"error": f"{type(e).__name__}: {e}"}
             print(f"FAIL {name}: raised {type(e).__name__}: {e}")
             continue
+        if tracing:
+            traces.append((name, rec))
         reports[name] = report.to_dict()
         ok = (report.liveness and report.safety_violations == 0
               and report.converged)
@@ -101,6 +125,12 @@ def main(argv: Optional[list] = None) -> int:
             json.dump({"seed": args.seed, "reports": reports}, f, indent=2,
                       default=str)
         print(f"wrote {args.json}")
+    if args.trace:
+        obs.write_chrome_trace(args.trace, traces)
+        print(f"wrote {args.trace}")
+    if args.events:
+        obs.write_events_jsonl(args.events, traces)
+        print(f"wrote {args.events}")
     return 1 if failures else 0
 
 

@@ -165,6 +165,115 @@ def test_ra103_membership_tests_silent():
 
 
 # ---------------------------------------------------------------------------
+# RA15x — observability hooks must be read-only
+# ---------------------------------------------------------------------------
+
+OBS_PATH = "src/repro/obs/helper.py"
+
+
+def test_ra151_fires_on_mutating_registered_hook():
+    bad = """
+        def evict_on_phase(phase, ctx):
+            ctx.rejected[0] = "nope"
+
+        def install(consensus):
+            consensus.add_phase_hook("*", evict_on_phase, when="after")
+    """
+    assert codes(run(bad, path=NEUTRAL_PATH)) == ["RA151"]
+
+
+def test_ra151_fires_on_mutating_lambda_hook():
+    bad = """
+        def install(consensus):
+            consensus.add_phase_hook(
+                "Tally", lambda phase, ctx: ctx.votes.clear())
+    """
+    assert codes(run(bad, path=NEUTRAL_PATH)) == ["RA151"]
+
+
+def test_ra151_fires_on_mutator_call_through_env():
+    bad = """
+        def watch(phase, ctx):
+            ctx.env.note("peek", round=ctx.round)
+
+        def install(consensus):
+            consensus.add_phase_hook("*", watch)
+    """
+    assert codes(run(bad, path=NEUTRAL_PATH)) == ["RA151"]
+
+
+def test_ra151_read_only_hook_silent():
+    good = """
+        def watch(phase, ctx):
+            print(phase, ctx.round, len(ctx.commitments),
+                  ctx.env.network.now if ctx.env else None)
+
+        def install(consensus):
+            consensus.add_phase_hook("*", watch, when="after")
+    """
+    assert codes(run(good, path=NEUTRAL_PATH)) == []
+
+
+def test_ra151_unregistered_function_silent_outside_obs():
+    # same mutation, but the function is never registered as a hook and
+    # the file is not in the obs package — protocol code may mutate ctx
+    good = """
+        def evict(phase, ctx):
+            ctx.rejected[0] = "nope"
+    """
+    assert codes(run(good, path=NEUTRAL_PATH)) == []
+
+
+def test_ra151_obs_package_ctx_mutation_fires():
+    bad = """
+        def snapshot(rec, ctx):
+            ctx.votes.clear()
+            return dict(ctx.commitments)
+    """
+    assert codes(run(bad, path=OBS_PATH)) == ["RA151"]
+
+
+def test_ra151_obs_package_read_only_silent():
+    good = """
+        def snapshot(rec, ctx, env):
+            rec.observe("votes", len(ctx.votes))
+            return env.network.now
+    """
+    assert codes(run(good, path=OBS_PATH)) == []
+
+
+def test_ra151_obs_package_own_state_mutation_silent():
+    good = """
+        def record(rec, value):
+            rec.spans.append(value)
+            rec.metrics.update({"x": 1})
+    """
+    assert codes(run(good, path=OBS_PATH)) == []
+
+
+def test_ra151_noqa_suppresses():
+    bad = """
+        def install(consensus):
+            consensus.add_phase_hook(
+                "*", lambda phase, ctx: ctx.votes.clear())  # noqa: RA151
+    """
+    report = run(bad, path=NEUTRAL_PATH)
+    assert codes(report) == []
+    assert [f.rule for f in report.suppressed] == ["RA151"]
+
+
+def test_ra151_tests_scope_silent():
+    bad = """
+        def fake_hook(phase, ctx):
+            ctx.votes.clear()
+
+        def install(consensus):
+            consensus.add_phase_hook("*", fake_hook)
+    """
+    assert codes(run(bad, path="tests/test_hooks.py")) == []
+
+
+# ---------------------------------------------------------------------------
 # RA2xx — constant-time crypto
 # ---------------------------------------------------------------------------
 

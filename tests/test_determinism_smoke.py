@@ -8,6 +8,16 @@ produce *byte-identical* protocol state on every node: the same ledger
 metrics, and the same scenario report. A single unseeded RNG draw, wall
 clock read, or hash-order iteration anywhere in the consensus path shows
 up here as a fingerprint mismatch.
+
+The runs are traced with ``repro.obs`` recorders, which pins three more
+things at zero extra cost:
+
+* the JSONL event log is *byte-identical* across the replays (events
+  carry only recorder seq + sim-bus time — no wall clock can leak in);
+* the ``repro.obs summarize --clock sim`` critical-path report is
+  deterministic per seed;
+* the Perfetto export is schema-valid and the per-round phase spans sum
+  exactly to the round's simulated duration.
 """
 
 from __future__ import annotations
@@ -15,8 +25,9 @@ from __future__ import annotations
 import hashlib
 import json
 
-from repro import api
+from repro import api, obs
 from repro.blockchain.block import block_hash
+from repro.obs.profile import format_summary
 
 
 def _ledger_hashes(run):
@@ -47,9 +58,17 @@ def _report_hash(run):
     ).hexdigest()
 
 
+def _traced_run():
+    rec = obs.TraceRecorder("byzantine_third")
+    with obs.use_recorder(rec):
+        run = api.run_bhfl(scenario="byzantine_third", seed=0)
+    return run, rec
+
+
 def test_byzantine_third_replays_bit_identically():
-    runs = [api.run_bhfl(scenario="byzantine_third", seed=0)
-            for _ in range(2)]
+    pairs = [_traced_run() for _ in range(2)]
+    runs = [p[0] for p in pairs]
+    recs = [p[1] for p in pairs]
 
     # per-node ledgers: identical across the two runs, node by node,
     # block hash by block hash (byzantine nodes included — even their
@@ -71,3 +90,60 @@ def test_byzantine_third_replays_bit_identically():
     # sanity: the scenario actually ran its adversaries
     assert runs[0].scenario_report.safety_violations == 0
     assert runs[0].chain_valid
+
+    # --- obs determinism: the event stream replays byte-identically -----
+    logs = [b"\n".join(line.encode() for line in
+                       obs.events_jsonl([("byzantine_third", rec)]))
+            for rec in recs]
+    assert logs[0] == logs[1], "JSONL event logs differ between replays"
+    assert logs[0], "traced run produced no events"
+
+    # the sim-clock profiling report is a pure function of the seed
+    traces = [obs.chrome_trace([("byzantine_third", rec)]) for rec in recs]
+    summaries = [format_summary(t, clock="sim") for t in traces]
+    assert summaries[0] == summaries[1]
+    assert "round 0" in summaries[0] and "phase:commit_reveal" in summaries[0]
+
+
+def test_byzantine_third_trace_schema_and_span_sums():
+    run, rec = _traced_run()
+    trace = obs.chrome_trace([("byzantine_third", rec)])
+
+    # Perfetto/Chrome trace_event schema: every record carries ph/pid/tid,
+    # complete spans carry numeric ts+dur, and the object is JSON-clean
+    events = trace["traceEvents"]
+    assert events and json.loads(json.dumps(trace, default=str))
+    assert {e["ph"] for e in events} <= {"M", "X", "i"}
+    for e in events:
+        assert isinstance(e["pid"], int) and isinstance(e["tid"], int)
+        if e["ph"] == "X":
+            assert e["ts"] >= 0 and e["dur"] >= 0
+            assert "span_id" in e["args"]
+        if e["ph"] == "i":
+            assert e.get("s") == "t"
+
+    # dual-clock span accounting: within each round, the consensus phase
+    # spans sum exactly to the consensus span's simulated duration, and
+    # all top-level children stay inside the round span on both clocks
+    spans = {s.span_id: s for s in rec.spans}
+    rounds = [s for s in rec.spans if s.name == "round"]
+    assert len(rounds) == len(run.history) and rounds
+    for rnd in rounds:
+        kids = [s for s in rec.spans if s.parent == rnd.span_id]
+        assert {"fel", "consensus"} <= {s.name for s in kids}
+        cons = next(s for s in kids if s.name == "consensus")
+        phases = [s for s in rec.spans
+                  if s.parent == cons.span_id and s.name.startswith("phase:")]
+        assert len(phases) == 5
+        # sim clock is exact: phases partition the consensus window
+        assert sum(p.sim_dur for p in phases) == cons.sim_dur
+        assert cons.sim_dur == rnd.sim_dur   # consensus advances the bus
+        # wall clock: children nest inside the round and account for most
+        # of it (the remainder is Python glue between the stages)
+        child_wall = sum(s.wall_dur for s in kids)
+        assert child_wall <= rnd.wall_dur * 1.001
+        assert child_wall >= rnd.wall_dur * 0.5
+        for s in kids:
+            assert s.wall_start >= rnd.wall_start - 1e-9
+            assert (s.wall_start + s.wall_dur
+                    <= rnd.wall_start + rnd.wall_dur + 1e-9)

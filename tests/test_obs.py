@@ -1,0 +1,292 @@
+"""`repro.obs` — unit tests for the tracer itself: dual-clock span
+nesting, the metrics registry, security-event attribution, exporter
+schemas, the summarize/convert CLI, and the equivalence pin showing the
+default NullRecorder changes no round outputs (tracing observes the
+protocol, it never perturbs it).
+"""
+
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro import api, obs
+from repro.obs.metrics import summarize_values
+from repro.obs.profile import (critical_paths, events_to_trace,
+                               format_summary, phase_percentiles)
+
+
+def _span(rec, name):
+    return next(s for s in rec.spans if s.name == name)
+
+
+# ---------------------------------------------------------------------------
+# spans: nesting, dual clocks, unwind
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_and_dual_clocks():
+    rec = obs.TraceRecorder("t")
+    rec.open_span("outer", cat="x", round=3, sim_now=100.0)
+    rec.open_span("inner", sim_now=110.0, detail="yes")
+    assert rec.depth() == 2
+    rec.close_span(sim_now=140.0)
+    rec.close_span(sim_now=200.0, extra=1)
+    assert rec.depth() == 0
+
+    outer, inner = _span(rec, "outer"), _span(rec, "inner")
+    # parentage and depth reflect the open/close stack
+    assert inner.parent == outer.span_id and outer.parent is None
+    assert (outer.depth, inner.depth) == (0, 1)
+    # sim clock: explicit start/end, exact durations
+    assert (inner.sim_start, inner.sim_end, inner.sim_dur) == (110.0, 140.0,
+                                                               30.0)
+    assert outer.sim_dur == 100.0
+    # wall clock: monotonic and nested
+    assert inner.wall_start >= outer.wall_start
+    assert inner.wall_dur <= outer.wall_dur
+    # attrs merge open-time and close-time keys
+    assert inner.attrs == {"detail": "yes"}
+    assert outer.attrs == {"extra": 1} and outer.round == 3
+
+
+def test_span_sim_clock_from_env_object():
+    class _Net:
+        now = 42.0
+
+    class _Env:
+        network = _Net()
+
+    env = _Env()
+    rec = obs.TraceRecorder()
+    rec.open_span("s", sim_env=env)
+    env.network.now = 55.0
+    rec.close_span()                 # end read deferred to close time
+    s = _span(rec, "s")
+    assert (s.sim_start, s.sim_end, s.sim_dur) == (42.0, 55.0, 13.0)
+
+
+def test_span_context_manager_records_errors():
+    rec = obs.TraceRecorder()
+    with pytest.raises(ValueError):
+        with rec.span("boom", sim_now=1.0):
+            raise ValueError("x")
+    assert _span(rec, "boom").error == "ValueError"
+    with rec.span("fine"):
+        pass
+    assert _span(rec, "fine").error is None
+
+
+def test_unwind_closes_orphans_and_tolerates_unmatched_close():
+    rec = obs.TraceRecorder()
+    rec.open_span("round")
+    rec.open_span("phase:a")
+    rec.open_span("net:x")
+    rec.unwind(1, error="QuorumNotReached")   # a phase raised mid-flight
+    assert rec.depth() == 1
+    assert {s.name: s.error for s in rec.spans} == {
+        "net:x": "QuorumNotReached", "phase:a": "QuorumNotReached"}
+    rec.close_span()
+    rec.close_span()                 # unmatched: swallowed, not raised
+    assert rec.depth() == 0 and len(rec.spans) == 3
+
+
+# ---------------------------------------------------------------------------
+# events: ordering and security attribution
+# ---------------------------------------------------------------------------
+
+def test_events_get_dense_sequence_numbers():
+    rec = obs.TraceRecorder()
+    rec.event("net_delivery", round=0, node=2, sim_ms=10.0)
+    rec.event("wal_append", node=1)
+    assert [e.seq for e in rec.events] == [0, 1]
+    assert rec.events[0].name == "net_delivery"
+    assert rec.events[0].attrs == {}
+
+
+def test_security_events_require_node_attribution():
+    rec = obs.TraceRecorder()
+    for name in sorted(obs.SECURITY_EVENTS):
+        with pytest.raises(ValueError, match="attributed"):
+            rec.event(name, round=0)
+        rec.event(name, round=0, node=4)     # attributed: fine
+    assert all(e.is_security for e in rec.events)
+    # non-security events never need a node
+    rec.event("net_exchange", round=0)
+    assert not rec.events[-1].is_security
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_metrics_registry_roundtrip():
+    rec = obs.TraceRecorder()
+    rec.counter("c.calls")
+    rec.counter("c.calls", 2)
+    rec.gauge("g.depth", 7.0)
+    for v in [1.0, 2.0, 3.0, 4.0]:
+        rec.observe("h.ms", v)
+    snap = rec.metrics_snapshot()
+    assert snap["counters"] == {"c.calls": 3}
+    assert snap["gauges"] == {"g.depth": 7.0}
+    h = snap["histograms"]["h.ms"]
+    assert (h["count"], h["sum"], h["max"]) == (4, 10.0, 4.0)
+    assert h["p50"] in (2.0, 3.0) and h["p99"] == 4.0
+
+
+def test_summarize_values_nearest_rank():
+    s = summarize_values([5.0, 1.0, 3.0])
+    assert (s["count"], s["p50"], s["max"]) == (3, 3.0, 5.0)
+    empty = summarize_values([])
+    assert empty["count"] == 0 and empty["max"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# the NullRecorder default: zero-cost, zero state
+# ---------------------------------------------------------------------------
+
+def test_null_recorder_is_inert():
+    rec = obs.NullRecorder()
+    assert not rec.enabled
+    cm = rec.span("anything", round=1)
+    assert cm is rec.span("else")        # one shared no-op CM
+    with cm:
+        pass
+    rec.open_span("x")
+    rec.event("envelope_rejected")       # not even validation runs
+    rec.counter("c")
+    rec.unwind(0)
+    rec.close_span()
+    assert rec.depth() == 0 and rec.metrics_snapshot() == {}
+
+
+def test_recorder_scoping():
+    assert isinstance(obs.get_recorder(), obs.NullRecorder)
+    rec = obs.TraceRecorder()
+    with obs.use_recorder(rec):
+        assert obs.get_recorder() is rec
+        inner = obs.TraceRecorder()
+        with obs.use_recorder(inner):
+            assert obs.get_recorder() is inner
+        assert obs.get_recorder() is rec
+    assert isinstance(obs.get_recorder(), obs.NullRecorder)
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+
+def _tiny_recorder():
+    rec = obs.TraceRecorder("tiny")
+    rec.open_span("round", cat="runtime", round=0, sim_now=0.0)
+    rec.open_span("consensus", cat="consensus", round=0, sim_now=0.0)
+    rec.open_span("phase:commit_reveal", cat="consensus", round=0,
+                  sim_now=0.0)
+    rec.close_span(sim_now=20.0)
+    rec.open_span("phase:block_mint", cat="consensus", round=0, sim_now=20.0)
+    rec.close_span(sim_now=30.0)
+    rec.close_span(sim_now=30.0)
+    rec.close_span(sim_now=30.0)
+    rec.event("net_delivery", round=0, node=1, sim_ms=5.0, attempt=0)
+    return rec
+
+
+def test_chrome_trace_schema():
+    trace = obs.chrome_trace([("tiny", _tiny_recorder())])
+    events = trace["traceEvents"]
+    assert trace["displayTimeUnit"] == "ms"
+    phs = [e["ph"] for e in events]
+    assert phs.count("X") == 4 and phs.count("i") == 1 and "M" in phs
+    xs = {e["name"]: e for e in events if e["ph"] == "X"}
+    rnd = xs["round"]
+    assert rnd["ts"] == 0 and rnd["dur"] >= 0
+    assert rnd["args"]["sim_dur_ms"] == 30.0
+    # parent links survive the export, so profilers can rebuild the tree
+    cons = xs["consensus"]
+    assert cons["args"]["parent"] == rnd["args"]["span_id"]
+    inst = next(e for e in events if e["ph"] == "i")
+    assert inst["s"] == "t" and inst["args"]["node"] == 1
+    json.dumps(trace)                    # JSON-clean without default=
+
+
+def test_events_jsonl_is_deterministic_and_wall_free():
+    lines = obs.events_jsonl([("tiny", _tiny_recorder())])
+    assert len(lines) == 1
+    row = json.loads(lines[0])
+    assert row == {"scenario": "tiny", "seq": 0, "event": "net_delivery",
+                   "round": 0, "node": 1, "sim_ms": 5.0,
+                   "attrs": {"attempt": 0}}
+    # no wall-clock field can leak into the replay-pinned log
+    assert "wall" not in lines[0]
+
+
+def test_profile_summary_and_critical_paths():
+    trace = obs.chrome_trace([("tiny", _tiny_recorder())])
+    pct = phase_percentiles(trace, clock="sim")
+    assert pct["commit_reveal"]["p50"] == 20.0
+    paths = critical_paths(trace, clock="sim")
+    assert len(paths) == 1 and paths[0]["total_ms"] == 30.0
+    parts = {p["name"]: p["ms"] for p in paths[0]["breakdown"]}
+    # the consensus span is drilled through to its phase children
+    assert parts == {"phase:commit_reveal": 20.0, "phase:block_mint": 10.0}
+    text = format_summary(trace, clock="sim")
+    assert "phase:commit_reveal" in text and "round 0" in text
+
+
+def test_cli_summarize_and_convert(tmp_path, capsys):
+    from repro.obs.__main__ import main
+    rec = _tiny_recorder()
+    trace_path = tmp_path / "trace.json"
+    events_path = tmp_path / "events.jsonl"
+    obs.write_chrome_trace(str(trace_path), [("tiny", rec)])
+    obs.write_events_jsonl(str(events_path), [("tiny", rec)])
+
+    assert main(["summarize", str(trace_path), "--clock", "sim"]) == 0
+    out = capsys.readouterr().out
+    assert "sim clock" in out and "phase:commit_reveal" in out
+
+    out_path = tmp_path / "converted.json"
+    assert main(["convert", str(events_path), "-o", str(out_path)]) == 0
+    converted = json.loads(out_path.read_text())
+    inst = [e for e in converted["traceEvents"] if e["ph"] == "i"]
+    assert len(inst) == 1 and inst[0]["ts"] == 5000   # sim_ms -> µs
+
+
+def test_events_to_trace_matches_chrome_trace_instants(tmp_path):
+    p = tmp_path / "e.jsonl"
+    obs.write_events_jsonl(str(p), [("tiny", _tiny_recorder())])
+    trace = events_to_trace(str(p))
+    names = {e["name"] for e in trace["traceEvents"] if e["ph"] == "i"}
+    assert names == {"net_delivery"}
+
+
+# ---------------------------------------------------------------------------
+# the pin: tracing observes the protocol, it never changes it
+# ---------------------------------------------------------------------------
+
+def _small_run():
+    return api.run_bhfl(model="mlp", n_nodes=3, clients_per_node=2,
+                        fel_iterations=1, rounds=2,
+                        data=api.make_mnist_like(n_train=300, n_test=60))
+
+
+def test_noop_recorder_changes_no_round_outputs():
+    """Identical protocol outputs with tracing off (NullRecorder default)
+    and on (TraceRecorder) — the recorder holds zero protocol state."""
+    with obs.use_recorder(obs.NullRecorder()):
+        off = _small_run()
+    with obs.use_recorder(obs.TraceRecorder("pin")) as rec:
+        on = _small_run()
+
+    def fingerprint(run):
+        return ([(m.round, m.leader_id, float(m.test_accuracy),
+                  float(m.test_loss)) for m in run.history],
+                [b.global_model_digest
+                 for b in run.runtime.consensus.ledgers[0].blocks])
+
+    assert fingerprint(off) == fingerprint(on)
+    # and the traced run really did record the work it watched
+    assert off.obs is None and on.obs is not None
+    assert len([s for s in rec.spans if s.name == "round"]) == 2
+    assert on.obs["counters"].get("recovery.wal_appends", 0) > 0
