@@ -18,19 +18,30 @@ accumulates per PR next to ``BENCH_consensus_overhead.json``.
 
 ``bench_crypto_backend_sweep`` (``--crypto-json``, recorded as
 ``benchmarks/BENCH_crypto.json``) is the point-arithmetic sweep for the
-Jacobian/JAX rework: every backend (naive / windowed / batch / jax) at
-N ∈ {4, 8, 16, 32}, measured against an in-process reconstruction of
-PR 4's *affine* batch path (``curve.affine_*`` — one modular inversion
-per point add), so the speedup is apples-to-apples on the machine that
-ran the sweep. The acceptance bar is the default backend ≥2.5× over the
-PR-4 affine batch at N=16.
+GLV/Pippenger rework: batches of N ∈ {4, 8, 16, 32, 64, 256} distinct
+signatures through every backend (windowed / batch / glv / jax, naive at
+small N), measured against TWO in-process reconstructions so the
+speedups are apples-to-apples on the machine that ran the sweep:
+
+* ``pr4_affine_batch`` — PR 4's affine RLC path (one modular inversion
+  per point add);
+* ``pr5_batch`` — PR 5's Jacobian batch path (fixed-window ladders +
+  Strauss–Shamir), i.e. the *previous* default backend, rebuilt verbatim
+  from the unchanged ``curve`` primitives it used.
+
+The sweep also records the AOT kernel-cache split (cold trace+compile vs
+warm blob load, per pow2 lane bucket, each measured in a fresh
+subprocess) and the ``set_backend("auto")`` calibration probe. The
+acceptance bars: default backend ≥2× over the PR-5 batch at N=32, and a
+jax warm start (AOT hit, fresh process) under 1 s.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
-import time
+import subprocess
+import sys
 from pathlib import Path
 from typing import Optional
 
@@ -51,11 +62,17 @@ NONCE_LENS = [16, 64, 256, 1024]
 HIDDEN = [64, 128, 256]
 NET_SIZES = [10, 25, 50]
 ROUND_SIZES = [4, 8, 16, 32]    # N for the round-level verify sweep
+CRYPTO_BATCH_SIZES = [4, 8, 16, 32, 64, 256]  # signatures per verify_batch
 NAIVE_MAX_N = 8                 # double-and-add at N=32 would take minutes
 MIN_BATCH_SPEEDUP_AT_16 = 3.0   # acceptance bar: batch vs windowed, N=16
-# acceptance bar for the Jacobian/JAX PR: default backend vs PR-4's
-# affine batch path, round-level verify at N=16
+# acceptance bar carried over from the Jacobian/JAX PR: default backend
+# vs PR-4's affine batch path at N=16
 MIN_DEFAULT_SPEEDUP_VS_PR4_AT_16 = 2.5
+# acceptance bars for the GLV/Pippenger PR: default backend vs PR-5's
+# Jacobian batch path at N=32, and the AOT warm start (fresh process,
+# serialized-kernel hit) at the 16-lane bucket
+MIN_BATCH_SPEEDUP_VS_PR5_AT_32 = 2.0
+MAX_JAX_WARM_START_S = 1.0
 
 
 def _model(hidden: int):
@@ -244,14 +261,87 @@ def _pr4_affine_verify_batch(items) -> bool:
     return curve.is_inf(acc)
 
 
+def _sweep_items(n: int):
+    """N distinct (tag, PK, digest) triples — the post-dedup batch shape
+    ``verify_batch`` folds into one RLC equation. (The round sweep above
+    covers the pre-dedup N×(N−1) receiver-copy workload.)"""
+    items = []
+    for i in range(n):
+        kp = crypto.ECDSAKeyPair.generate(b"cs" + i.to_bytes(2, "big"))
+        d = crypto.sha256_digest(b"sweep", i.to_bytes(2, "big"))
+        items.append((crypto.dsign(d, kp.private_key), kp.public_key, d))
+    return items
+
+
+def _pr5_batch_verify(items) -> bool:
+    """PR 5's ``batch`` path — the previous default backend — rebuilt
+    verbatim from the (unchanged) curve primitives it used: one
+    fixed-window Jacobian ladder per key plus Strauss–Shamir for the R
+    terms, one point-mul per batch item. The GLV+Pippenger headline bar
+    (``MIN_BATCH_SPEEDUP_VS_PR5_AT_32``) measures against this."""
+    distinct: "OrderedDict[tuple, None]" = OrderedDict()
+    for tag, pk, d in items:
+        distinct.setdefault((tuple(tag), pk, d), None)
+    sg = 0
+    acc = curve.J_INF
+    r_terms = []
+    for (tag, pk, d) in distinct:
+        sig = crypto.Signature(*tag)
+        R = crypto._recover_R(sig)
+        assert R is not None
+        w = crypto._inv_mod(sig.s, crypto._N)
+        a = crypto._rlc_coefficient()
+        sg = (sg + a * (crypto._bits2int(d) * w % crypto._N)) % crypto._N
+        u2 = sig.r * w % crypto._N
+        acc = curve.jc_add(acc, curve.point_mul_windowed_jc(
+            a * u2 % crypto._N, curve.pk_table(pk)))
+        r_terms.append((a, (R[0], (-R[1]) % crypto._P)))
+    acc = curve.jc_add(acc,
+                       curve.point_mul_windowed_jc(sg, curve.g_table()))
+    acc = curve.jc_add(acc, curve.multi_scalar_jc(r_terms))
+    return curve.jc_is_inf(acc)
+
+
+def _aot_cache_split(lanes) -> dict:
+    """Cold vs warm kernel start-up per pow2 lane bucket, each side in a
+    FRESH subprocess (in-process timing would hit jit/export caches):
+
+    * ``cold`` — ``aotcache --warm``: trace + export + XLA compile where
+      no blob exists yet; a bucket already on disk reports
+      ``source: "aot"`` instead of a compile (its cold cost was paid on
+      an earlier run).
+    * ``warm`` — ``aotcache --smoke``: blob deserialize + persistent-XLA-
+      cache hit — the start-up every later process actually pays.
+    """
+    arg = ",".join(str(x) for x in lanes)
+    out: dict = {}
+    for label, flag in (("cold", "--warm"), ("warm", "--smoke")):
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.core.crypto.aotcache",
+             flag, "--lanes", arg], capture_output=True, text=True)
+        try:
+            report = json.loads(proc.stdout)
+        except json.JSONDecodeError:
+            out[label] = {"error": proc.stderr[-500:]}
+            continue
+        out[label] = {f"l{b.get('lanes', '?')}": b
+                      for b in report["buckets"]}
+        for key, b in out[label].items():
+            if "first_call_s" in b:
+                emit(f"crypto_aot/{label}/{key}",
+                     b["first_call_s"] * 1e6, f"source={b['source']}")
+    return out
+
+
 def bench_crypto_backend_sweep(results: Optional[dict] = None) -> dict:
     """Point-arithmetic backend sweep (BENCH_crypto.json).
 
-    Round-level ``verify_batch`` cost per backend at N ∈ {4, 8, 16, 32},
-    plus the in-process PR-4 affine batch baseline. ``jax`` is warmed
-    first (one compile per lane bucket — recorded separately as
-    ``jax_compile_s``) so the steady-state number is what a long-running
-    round pipeline would see.
+    ``verify_batch`` cost per backend over batches of N distinct
+    signatures, against the in-process PR-4 (affine) and PR-5 (Jacobian
+    fixed-window) reconstructions. ``jax`` rows are steady-state (the
+    lane bucket's kernel warmed first); the cold-vs-warm start-up split
+    lives under ``aot``, measured in fresh subprocesses, and the
+    ``set_backend("auto")`` probe under ``calibration``.
     """
     try:
         crypto._get_ops("jax")
@@ -259,11 +349,11 @@ def bench_crypto_backend_sweep(results: Optional[dict] = None) -> dict:
     except Exception as e:          # jax-less installs still get the sweep
         have_jax = False
         emit("crypto_backends/jax", 0.0, f"unavailable: {e}")
+    aot = _aot_cache_split(CRYPTO_BATCH_SIZES) if have_jax else {}
     sweep: dict = {}
-    jax_compile_s = {}
-    for n in ROUND_SIZES:
-        items = _round_items(n)
-        row: dict = {"n_nodes": n, "verifications": len(items)}
+    for n in CRYPTO_BATCH_SIZES:
+        items = _sweep_items(n)
+        row: dict = {"batch_size": n}
 
         def run_backend(backend):
             # explicit raise, not assert: the timed workload must survive
@@ -275,49 +365,79 @@ def bench_crypto_backend_sweep(results: Optional[dict] = None) -> dict:
                         f"backend {backend!r} rejected a valid batch")
             return run
 
-        def run_pr4_baseline():
-            if not _pr4_affine_verify_batch(items):
-                raise RuntimeError("PR-4 affine baseline rejected a "
-                                   "valid batch")
+        def run_recon(name, fn):
+            def run():
+                if not fn(items):
+                    raise RuntimeError(
+                        f"{name} reconstruction rejected a valid batch")
+            return run
 
         if n <= NAIVE_MAX_N:
             row["naive_us"] = time_call(run_backend("naive"), repeats=1,
                                         warmup=1)
             emit(f"crypto_backends/naive/N{n}", row["naive_us"])
-        row["windowed_us"] = time_call(run_backend("windowed"), repeats=3)
+        # the whole sweep records min-of-N, not the median: the bench
+        # runner is a single shared core, so contention only ever
+        # inflates samples — the fastest rep is the honest steady-state
+        # cost and keeps the pinned headline ratio out of scheduler noise
+        row["windowed_us"] = time_call(run_backend("windowed"), repeats=3,
+                                       stat="min")
         emit(f"crypto_backends/windowed/N{n}", row["windowed_us"])
-        row["pr4_affine_batch_us"] = time_call(run_pr4_baseline, repeats=3)
+        row["pr4_affine_batch_us"] = time_call(
+            run_recon("pr4", _pr4_affine_verify_batch), repeats=3,
+            stat="min")
         emit(f"crypto_backends/pr4_affine_batch/N{n}",
              row["pr4_affine_batch_us"])
-        row["batch_us"] = time_call(run_backend("batch"), repeats=3)
-        row["batch_speedup_vs_pr4"] = (row["pr4_affine_batch_us"]
+        # the headline ratio lives on these two rows — extra repeats
+        row["pr5_batch_us"] = time_call(
+            run_recon("pr5", _pr5_batch_verify), repeats=7, stat="min")
+        emit(f"crypto_backends/pr5_batch/N{n}", row["pr5_batch_us"])
+        row["batch_us"] = time_call(run_backend("batch"), repeats=7,
+                                    stat="min")
+        row["batch_speedup_vs_pr5"] = (row["pr5_batch_us"]
                                        / row["batch_us"])
         emit(f"crypto_backends/batch/N{n}", row["batch_us"],
-             f"speedup_vs_pr4={row['batch_speedup_vs_pr4']:.1f}x")
+             f"speedup_vs_pr5={row['batch_speedup_vs_pr5']:.2f}x")
+        row["glv_us"] = time_call(run_backend("glv"), repeats=3,
+                                  stat="min")
+        emit(f"crypto_backends/glv/N{n}", row["glv_us"],
+             f"speedup_vs_pr5={row['pr5_batch_us']/row['glv_us']:.2f}x")
         if have_jax:
-            t0 = time.perf_counter()
-            run_backend("jax")()        # first call compiles this bucket
-            jax_compile_s[f"N{n}"] = time.perf_counter() - t0
-            row["jax_us"] = time_call(run_backend("jax"), repeats=3)
-            row["jax_speedup_vs_pr4"] = (row["pr4_affine_batch_us"]
-                                         / row["jax_us"])
-            emit(f"crypto_backends/jax/N{n}", row["jax_us"],
-                 f"speedup_vs_pr4={row['jax_speedup_vs_pr4']:.1f}x")
+            row["jax_warm_us"] = time_call(run_backend("jax"), repeats=3,
+                                           stat="min")
+            row["jax_speedup_vs_pr5"] = (row["pr5_batch_us"]
+                                         / row["jax_warm_us"])
+            emit(f"crypto_backends/jax/N{n}", row["jax_warm_us"],
+                 f"speedup_vs_pr5={row['jax_speedup_vs_pr5']:.2f}x")
         sweep[f"N{n}"] = row
+    crypto.set_backend("auto")      # run + record the calibration probe
+    calib = crypto.calibration_info()
     default = crypto.get_backend()
-    if f"{default}_us" not in sweep["N16"]:
+    default_key = "jax_warm_us" if default == "jax" else f"{default}_us"
+    if default_key not in sweep["N16"]:
         raise RuntimeError(
             f"default backend {default!r} was not timed at N=16 — the "
             f"acceptance metric cannot be recorded against it")
-    measured = sweep["N16"]["pr4_affine_batch_us"] / sweep["N16"][f"{default}_us"]
+    warm16 = None
+    w16 = aot.get("warm", {}).get("l16", {})
+    if "first_call_s" in w16:
+        warm16 = w16.get("load_s", 0.0) + w16["first_call_s"]
     out = {
         "point_backends": sweep,
         "default_backend": default,
-        "jax_compile_s": jax_compile_s,
+        "calibration": calib,
+        "aot": aot,
         "target": {
+            "min_batch_speedup_vs_pr5_at_N32":
+                MIN_BATCH_SPEEDUP_VS_PR5_AT_32,
+            "measured_at_N32": sweep["N32"]["batch_speedup_vs_pr5"],
             "min_default_speedup_vs_pr4_batch_at_N16":
                 MIN_DEFAULT_SPEEDUP_VS_PR4_AT_16,
-            "measured_at_N16": measured,
+            "measured_vs_pr4_at_N16":
+                sweep["N16"]["pr4_affine_batch_us"]
+                / sweep["N16"][default_key],
+            "max_jax_warm_start_s": MAX_JAX_WARM_START_S,
+            "measured_jax_warm_start_s_at_l16": warm16,
         },
     }
     if results is not None:

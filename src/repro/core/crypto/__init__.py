@@ -9,7 +9,8 @@ a dependency-free implementation of both:
   style, HMAC-DRBG) ECDSA over secp256k1.
 * ``verify_batch`` — round-level verification of many (tag, PK, digest)
   triples at once, behind a pluggable backend seam
-  (``set_backend("naive" | "windowed" | "batch" | "jax")``).
+  (``set_backend("naive" | "windowed" | "batch" | "glv" | "jax" |
+  "auto")``).
 
 The ``batch`` backend (the default) verifies a whole phase's envelopes with
 one randomized-linear-combination equation: per signature it recovers the
@@ -28,14 +29,18 @@ Package layout (the point-arithmetic hot loop lives below the seam):
 
 * ``field``  — prime-field helpers (inversion, batched inversion, sqrt);
 * ``curve``  — secp256k1 in Jacobian coordinates: add/double with no
-  per-op inversion, window tables built with one batched inversion,
-  shared-doubling multi-scalar evaluation (plus the affine legacy ops the
-  benchmarks keep as the pre-Jacobian baseline);
+  per-op inversion, window tables built with one batched inversion, and
+  the GLV + wNAF/Pippenger multi-scalar engine (``msm_jc``) behind the
+  batch equation (plus the affine legacy ops the benchmarks keep as the
+  pre-Jacobian baseline);
 * ``backends.python`` — the ``CurveOps`` seam and the naive / windowed /
-  batch backends;
+  batch / glv backends;
 * ``backends.jax`` — the limb-vectorized JAX backend: field elements as
   8×32-bit limbs in uint64 lanes, the whole RLC batch equation as one
-  jitted multi-scalar program over all deduplicated signatures.
+  jitted GLV multi-scalar program over all deduplicated signatures;
+* ``aotcache`` — on-disk ``jax.export`` kernel blobs + a persistent XLA
+  compilation cache, so the jax backend's multi-second compile is paid
+  once per install instead of once per process.
 
 The Python backends run in the *host control plane* of the framework: the
 TPU training graph never hashes or signs. The ``jax`` backend moves the
@@ -57,8 +62,9 @@ from dataclasses import dataclass
 from typing import Dict, Iterator, List, NamedTuple, Optional, Sequence, Tuple
 
 from repro.core.crypto import curve, field
-from repro.core.crypto.backends.python import (BatchOps, CurveOps, NaiveOps,
-                                               WindowedOps, rlc_coefficient)
+from repro.core.crypto.backends.python import (BatchOps, CurveOps, GLVOps,
+                                               NaiveOps, WindowedOps,
+                                               rlc_coefficient)
 from repro.obs import get_recorder
 
 # ---------------------------------------------------------------------------
@@ -108,12 +114,17 @@ def _point_mul(k: int, p: Point) -> Point:
 #              the per-message fast path.
 # "batch"    — per-message verification identical to "windowed", but
 #              ``verify_batch`` additionally folds a whole phase's tags into
-#              one randomized-linear-combination equation with bisection
-#              fallback for attribution.
+#              one randomized-linear-combination equation (GLV +
+#              wNAF/Pippenger MSM) with bisection fallback for attribution.
+# "glv"      — ``batch`` semantics with a uniform-operation-schedule
+#              fixed-base ladder on the signing side and the interleaved
+#              wNAF engine pinned for the equation.
 # "jax"      — ``batch`` semantics with the RLC equation evaluated by the
 #              limb-vectorized JAX kernel (``backends.jax``); requires jax.
+# set_backend("auto") runs a one-shot calibration probe and picks
+# between "batch" and "jax" (see _calibrate).
 
-BACKENDS = ("naive", "windowed", "batch", "jax")
+BACKENDS = ("naive", "windowed", "batch", "glv", "jax")
 _BACKEND = "batch"
 _OPS: Dict[str, CurveOps] = {}
 
@@ -123,7 +134,7 @@ def _get_ops(name: str) -> CurveOps:
     the jax backend imports jax only when first requested)."""
     if name not in BACKENDS:
         raise ValueError(f"unknown crypto backend {name!r}; "
-                         f"choose from {BACKENDS}")
+                         f"choose from {BACKENDS + ('auto',)}")
     ops = _OPS.get(name)
     if ops is None:
         if name == "jax":
@@ -132,15 +143,20 @@ def _get_ops(name: str) -> CurveOps:
         else:
             ops = {"naive": NaiveOps,
                    "windowed": WindowedOps,
-                   "batch": BatchOps}[name]()
+                   "batch": BatchOps,
+                   "glv": GLVOps}[name]()
         _OPS[name] = ops
     return ops
 
 
 def set_backend(name: str) -> None:
     """Select the crypto backend (``"naive" | "windowed" | "batch" |
-    "jax"``). Selecting ``"jax"`` on a jax-less install raises."""
+    "glv" | "jax" | "auto"``). Selecting ``"jax"`` on a jax-less install
+    raises; ``"auto"`` probes once and settles on "batch" or "jax"
+    (:func:`calibration_info` reports the decision)."""
     global _BACKEND
+    if name == "auto":
+        name = _calibrate()
     _get_ops(name)          # validates the name and any gated dependency
     _BACKEND = name
 
@@ -158,6 +174,80 @@ def use_backend(name: str) -> Iterator[None]:
         yield
     finally:
         set_backend(prev)
+
+
+# ---------------------------------------------------------------------------
+# Backend auto-calibration
+# ---------------------------------------------------------------------------
+
+_CALIBRATION: Optional[dict] = None
+
+
+def calibration_info() -> Optional[dict]:
+    """The decision record of the last ``set_backend("auto")`` probe, or
+    None if auto was never requested (recorded into BENCH_crypto.json by
+    the benchmark sweep)."""
+    return _CALIBRATION
+
+
+def _calibrate(probe_n: int = 16, force: bool = False) -> str:
+    """One-shot probe behind ``set_backend("auto")``.
+
+    The jax limb kernel only beats CPython big-ints when its compile cost
+    is already sunk, so the probe refuses to consider jax unless the AOT
+    kernel cache (``aotcache``) has serialized kernels for this jax
+    install — a cold probe would charge ~15 s of XLA compile to a
+    "cheap" calibration. With a warm cache each candidate verifies a
+    synthetic ``probe_n``-signature batch twice: the first call warms
+    per-key tables / loads the kernel (one-shot costs a long-running
+    round pipeline amortizes away), the second is timed and decides.
+    """
+    global _CALIBRATION
+    if _CALIBRATION is not None and not force:
+        return _CALIBRATION["chosen"]
+    info: dict = {"probe_n": probe_n, "chosen": "batch",
+                  "reason": "python batch default"}
+    try:
+        from repro.core.crypto import aotcache
+        import jax  # noqa: F401  (probe only makes sense with jax)
+        have_jax = True
+    except Exception as exc:  # pragma: no cover - jax-less installs
+        info["reason"] = f"jax unavailable ({type(exc).__name__})"
+        have_jax = False
+    if have_jax:
+        if not aotcache.has_cached_kernels():
+            info["reason"] = ("no AOT kernel cache — jax would pay a "
+                              "cold compile; run the bench sweep or "
+                              "python -m repro.core.crypto.aotcache "
+                              "--warm to populate it")
+        else:
+            items = [(dsign(sha256_digest(b"calib", bytes([i])), kp.private_key),
+                      kp.public_key, sha256_digest(b"calib", bytes([i])))
+                     for i, kp in ((j, ECDSAKeyPair.generate(b"calib%d" % j))
+                                   for j in range(probe_n))]
+            timings = {}
+            for cand in ("batch", "jax"):
+                try:
+                    if not _verify_batch_impl(items, backend=cand).ok:
+                        raise RuntimeError(f"{cand} rejected valid probe")
+                    # warm-up above paid the one-shot costs (table
+                    # builds, kernel load); the steady-state call decides
+                    t0 = time.perf_counter()
+                    ok = _verify_batch_impl(items, backend=cand).ok
+                    timings[cand] = time.perf_counter() - t0
+                    if not ok:  # pragma: no cover - defensive
+                        raise RuntimeError(f"{cand} rejected valid probe")
+                except Exception as exc:  # pragma: no cover - defensive
+                    info["reason"] = (f"probe failed on {cand} "
+                                      f"({type(exc).__name__})")
+                    timings = {}
+                    break
+            if timings:
+                info["probe_seconds"] = timings
+                info["chosen"] = min(timings, key=timings.get)
+                info["reason"] = "timed probe (AOT cache warm)"
+    _CALIBRATION = info
+    return info["chosen"]
 
 
 # ---------------------------------------------------------------------------
@@ -228,7 +318,9 @@ class ECDSAKeyPair:
         if seed is None:
             seed = os.urandom(32)
         priv = (int.from_bytes(hashlib.sha256(seed).digest(), "big") % (_N - 1)) + 1
-        pub = _point_mul(priv, curve.G)
+        # uniform-schedule GLV ladder: key derivation is the one fixed-base
+        # multiply whose scalar is a long-lived secret (RA203)
+        pub = curve.point_mul_base_ct(priv)
         return ECDSAKeyPair(priv, pub)
 
 
@@ -400,7 +492,7 @@ def _verify_batch_impl(items: Sequence[BatchItem],
         distinct.setdefault(key, []).append(i)
 
     singles: List[tuple] = []      # keys that must go through dverify alone
-    prepared: List[tuple] = []     # (key, (u1, u2, pk, R)) for the equation
+    pending: List[tuple] = []      # (key, r, s, z, pk, R) awaiting s⁻¹
     for key in distinct:
         (tag, pk, d) = key[0], key[1], key[2]
         r, s = tag[0], tag[1]
@@ -413,8 +505,15 @@ def _verify_batch_impl(items: Sequence[BatchItem],
         if R is None:
             singles.append(key)
             continue
-        w = _inv_mod(s, _N)
-        prepared.append((key, (_bits2int(d) * w % _N, r * w % _N, pk, R)))
+        pending.append((key, r, s, _bits2int(d), pk, R))
+
+    # one Montgomery pass amortizes the per-signature s⁻¹ (s ∈ [1, N) so
+    # no zero entries); the per-item pow(s, -1, N) otherwise shows up at
+    # batch sizes
+    s_invs = field.batch_inv([p[2] for p in pending], _N)
+    prepared: List[tuple] = []     # (key, (u1, u2, pk, R)) for the equation
+    for (key, r, _s, z, pk, R), w in zip(pending, s_invs):
+        prepared.append((key, (z * w % _N, r * w % _N, pk, R)))
 
     bad_keys = set()
     for key in singles:

@@ -35,19 +35,27 @@ def batch_inv(xs: Sequence[int], m: int = P) -> List[int]:
 
     Forward pass accumulates prefix products, a single ``pow(·, -1, m)``
     inverts the total, and the backward pass peels per-element inverses —
-    3(N−1) multiplications + 1 inversion instead of N inversions. All
-    inputs must be nonzero mod ``m``.
+    3(N−1) multiplications + 1 inversion instead of N inversions.
+
+    Zero entries are passed through as 0 (treated as "no inverse
+    requested" rather than an error): the JAX backend batch-normalizes
+    combination tables whose unused slots hold the point at infinity
+    (Z = 0), and skipping them here avoids a host-side filter pass.
     """
-    xs = list(xs)
+    xs = [x % m for x in xs]
     if not xs:
         return []
-    prefix = [xs[0] % m]
-    for x in xs[1:]:
-        prefix.append(prefix[-1] * x % m)
-    inv = inv_mod(prefix[-1], m)
+    acc = 1
+    prefix = []
+    for x in xs:
+        prefix.append(acc)
+        if x:
+            acc = acc * x % m
+    inv = inv_mod(acc, m)
     out = [0] * len(xs)
-    for i in range(len(xs) - 1, 0, -1):
-        out[i] = inv * prefix[i - 1] % m
-        inv = inv * xs[i] % m
-    out[0] = inv % m
+    for i in range(len(xs) - 1, -1, -1):
+        x = xs[i]
+        if x:
+            out[i] = inv * prefix[i] % m
+            inv = inv * x % m
     return out

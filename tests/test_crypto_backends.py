@@ -1,17 +1,22 @@
 """Differential backend parity for the secp256k1 point-arithmetic seam.
 
 Every backend — ``naive`` (Jacobian double-and-add), ``windowed``
-(fixed-window tables), ``batch`` (windowed + the RLC batch equation), and
-``jax`` (limb-vectorized RLC kernel) — must agree with the single source
-of truth, the per-message ``dverify`` predicate, on every input shape:
-valid tags, forged tags, tampered recovery bits, and bare ``(r, s)``
-pairs. Property-driven via the optional-hypothesis shim.
+(fixed-window tables), ``batch`` (GLV + wNAF/Pippenger MSM behind the RLC
+batch equation), ``glv`` (same MSM forced onto the interleaved-wNAF
+engine), and ``jax`` (GLV limb-vectorized RLC kernel) — must agree with
+the single source of truth, the per-message ``dverify`` predicate, on
+every input shape: valid tags, forged tags, tampered recovery bits, and
+bare ``(r, s)`` pairs. Property-driven via the optional-hypothesis shim.
 
 The curve layer is pinned separately: the Jacobian formulas (including
 the batched-inversion window-table build) must reproduce the affine
 baseline bit-for-bit — that equivalence is what makes the backend sweep
 in ``benchmarks/bench_hcds.py`` a fair before/after.
 """
+
+import json
+import random
+from pathlib import Path
 
 import pytest
 from _hypothesis_compat import given, settings, st
@@ -165,3 +170,195 @@ def test_window_table_batched_inversion_matches_affine_build():
             assert table[w][d] == expect
         for _ in range(curve._WINDOW_BITS):
             base = curve.affine_point_add(base, base)
+
+
+# ---------------------------------------------------------------------------
+# GLV decomposition + endomorphism
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 1 << 62))
+def test_glv_decompose_recomposes_with_short_halves(seed):
+    """k₁ + k₂·λ ≡ k (mod n) and both halves fit in 129 signed bits —
+    the property that lets the ladders run half-length."""
+    k = (seed * 0x9E3779B97F4A7C15 + seed + 1) % curve.N
+    k1, k2 = curve.glv_decompose(k)
+    assert (k1 + k2 * curve.GLV_LAMBDA) % curve.N == k % curve.N
+    assert abs(k1) < 1 << 129 and abs(k2) < 1 << 129
+
+
+def test_glv_decompose_edge_scalars():
+    for k in (0, 1, 2, curve.N - 1, curve.N // 2, curve.GLV_LAMBDA,
+              curve.N + 7):
+        k1, k2 = curve.glv_decompose(k)
+        assert (k1 + k2 * curve.GLV_LAMBDA) % curve.N == k % curve.N, k
+        assert abs(k1) < 1 << 129 and abs(k2) < 1 << 129, k
+
+
+def test_endomorphism_is_lambda_mul():
+    """φ(P) = (β·x, y) must equal λ·P — one field mul standing in for a
+    whole scalar multiplication."""
+    pk = _KPS[0].public_key
+    assert curve.endo(pk) == curve.point_mul_naive(curve.GLV_LAMBDA, pk)
+    assert curve.endo(curve.INF) == curve.INF
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(1, 1 << 62))
+def test_wnaf_digits_reconstruct(seed):
+    """Sparse wNAF invariants: Σ d·2^pos == k, digits odd and in
+    (−2^(w−1), 2^(w−1))."""
+    k = (seed * 0xD1B54A32D192ED03 + 1) % curve.N or 1
+    for w in (curve._FRESH_W, curve._MSM_W):
+        digits = curve.wnaf_digits(k, w)
+        assert sum(d << pos for pos, d in digits) == k
+        assert all(d & 1 and abs(d) < 1 << (w - 1) for _, d in digits)
+
+
+# ---------------------------------------------------------------------------
+# MSM engines vs the naive reference
+# ---------------------------------------------------------------------------
+
+def _msm_cases():
+    pk0, pk1 = _KPS[0].public_key, _KPS[1].public_key
+    neg1 = (pk1[0], (-pk1[1]) % crypto._P)
+    big = curve.N - 2
+    return [
+        [],
+        [(0, curve.G)],                              # k = 0 drops out
+        [(5, curve.INF)],                            # P = ∞ drops out
+        [(1, curve.G)],
+        [(big, pk0), (3, pk0), (3, pk0)],            # duplicate points
+        [(123456789, curve.G), (big, pk0), (0, pk1), (7, curve.INF)],
+        [(curve.N - 1, pk0), (curve.N + 5, pk1)],    # k ≥ N reduces
+        [(big, pk1), (big, neg1)],                   # pair cancels to ∞
+    ]
+
+
+def test_msm_engines_match_naive_multi_scalar():
+    for pairs in _msm_cases():
+        ref = curve.multi_scalar(pairs)
+        assert curve.msm(fresh_pairs=pairs, engine="wnaf") == ref, pairs
+        assert curve.msm(fresh_pairs=pairs, engine="pippenger") == ref, pairs
+        assert curve.msm(base_pairs=pairs) == ref, pairs
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_msm_random_matches_naive(seed):
+    rng = random.Random(seed)
+    points = [curve.G, _KPS[0].public_key, _KPS[1].public_key,
+              curve.endo(_KPS[2].public_key)]
+    pairs = [(rng.randrange(0, curve.N), p) for p in points]
+    ref = curve.multi_scalar(pairs)
+    assert curve.msm(fresh_pairs=pairs, engine="pippenger") == ref
+    assert curve.msm(fresh_pairs=pairs, engine="wnaf") == ref
+    assert curve.msm(base_pairs=pairs) == ref
+    split = len(pairs) // 2
+    assert curve.msm(base_pairs=pairs[:split],
+                     fresh_pairs=pairs[split:]) == ref
+
+
+def test_msm_rejects_unknown_engine():
+    with pytest.raises(ValueError):
+        curve.msm_jc(fresh_pairs=[(1, curve.G)], engine="strauss")
+
+
+# ---------------------------------------------------------------------------
+# uniform-schedule fixed-base ladder
+# ---------------------------------------------------------------------------
+
+def test_ct_base_mul_matches_naive_edges():
+    for k in (0, 1, 2, 3, curve.N - 1, curve.N // 2, (1 << 255) % curve.N):
+        assert curve.point_mul_base_ct(k) == \
+            curve.point_mul_naive(k, curve.G), k
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1 << 62))
+def test_ct_base_mul_matches_naive_random(seed):
+    k = (seed * 0xA0761D6478BD642F + seed) % curve.N
+    assert curve.point_mul_base_ct(k) == curve.point_mul_naive(k, curve.G)
+
+
+# ---------------------------------------------------------------------------
+# cache bounds: the per-key tables must not grow without bound
+# ---------------------------------------------------------------------------
+
+def _distinct_points(n):
+    return [curve.point_mul_naive(i + 2, curve.G) for i in range(n)]
+
+
+def test_msm_table_cache_is_bounded_lru(monkeypatch):
+    monkeypatch.setattr(curve, "_MSM_CACHE_MAX", 4)
+    curve._MSM_TABLES.clear()
+    pts = _distinct_points(6)
+    for p in pts:
+        curve.msm_table(p)
+    assert len(curve._MSM_TABLES) == 4
+    assert pts[0] not in curve._MSM_TABLES      # oldest evicted
+    assert pts[-1] in curve._MSM_TABLES
+    curve.msm_table(pts[2])                     # touch → most recent
+    curve.msm_table(_distinct_points(7)[-1])    # insert → evicts pts[3]
+    assert pts[2] in curve._MSM_TABLES
+    assert pts[3] not in curve._MSM_TABLES
+    curve._MSM_TABLES.clear()
+
+
+def test_pk_table_cache_is_bounded_lru(monkeypatch):
+    monkeypatch.setattr(curve, "_PK_CACHE_MAX", 4)
+    curve._PK_TABLES.clear()
+    pts = _distinct_points(6)
+    for p in pts:
+        curve.pk_table(p)
+    assert len(curve._PK_TABLES) == 4
+    assert pts[0] not in curve._PK_TABLES
+    curve.pk_table(pts[2])                      # touch → survives the next
+    curve.pk_table(_distinct_points(7)[-1])     # insert (evicts pts[3])
+    assert pts[2] in curve._PK_TABLES
+    assert pts[3] not in curve._PK_TABLES
+    curve._PK_TABLES.clear()
+
+
+def test_g_msm_table_not_in_lru():
+    """The base-point table is pinned module-global — it must never
+    occupy (or be evicted from) the bounded public-key LRU."""
+    t = curve.msm_table(curve.G)
+    assert t is curve.g_msm_table()
+    assert curve.G not in curve._MSM_TABLES
+
+
+# ---------------------------------------------------------------------------
+# Pippenger engine drives the full verify path
+# ---------------------------------------------------------------------------
+
+def test_bisection_parity_with_pippenger_engine(monkeypatch):
+    """Force the bucket engine under the batch backend's RLC equation:
+    forgery attribution must be identical to the default engine."""
+    from repro.core.crypto.backends.python import BatchOps
+    monkeypatch.setattr(BatchOps, "msm_engine", "pippenger")
+    items = _batch(6)
+    items[2] = _mutate(items[2], "forged-s")
+    items[5] = _mutate(items[5], "forged-digest")
+    res = crypto.verify_batch(items, backend="batch")
+    assert not res.ok and res.bad == (2, 5)
+    assert crypto.verify_batch(_batch(5), backend="batch").ok
+
+
+# ---------------------------------------------------------------------------
+# benchmark headline pins (committed BENCH_crypto.json)
+# ---------------------------------------------------------------------------
+
+def test_bench_crypto_headline_pins():
+    """The committed sweep must carry this PR's acceptance numbers:
+    batch ≥2× over the PR-5 batch reconstruction at N=32, and a jax AOT
+    warm start (fresh process, serialized-kernel hit) under 1 s."""
+    path = (Path(__file__).resolve().parents[1]
+            / "benchmarks" / "BENCH_crypto.json")
+    data = json.loads(path.read_text())
+    t = data["target"]
+    assert t["measured_at_N32"] >= t["min_batch_speedup_vs_pr5_at_N32"]
+    assert data["point_backends"]["N32"]["batch_speedup_vs_pr5"] >= 2.0
+    warm = t["measured_jax_warm_start_s_at_l16"]
+    assert warm is not None and warm < t["max_jax_warm_start_s"]
+    assert data["calibration"]["chosen"] == data["default_backend"]
