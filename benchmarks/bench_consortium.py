@@ -1,0 +1,132 @@
+"""Consortium sharding sweep: round wall-time vs committee count at fixed N.
+
+The single-committee PoFEL pipeline broadcasts every envelope to every
+node, so per-round work grows ~N² and realistic scale caps near N≈32.
+Sharding the consortium into K committee-scoped instances
+(``repro.fl.consortium``) bounds each shard's fan-out by its own size
+(~N/K), with a K-block cross-shard checkpoint epoch as the stitching
+cost. This sweep runs the full BHFL pipeline at fixed N over
+K ∈ {1, 2, 4, 8} and records each cell's wall-time per round — the
+sharding claim is the headline ratio round(K=1) / round(K=max).
+
+K=1 runs the pre-shard single-committee path (``committees=1`` is the
+bench baseline the equivalence test pins), so the comparison is against
+exactly the code the consortium replaced, on the same scenario sizing.
+
+CLI::
+
+    PYTHONPATH=src python -m benchmarks.bench_consortium \
+        --json benchmarks/BENCH_consortium.json        # N=256, K=1,2,4,8
+    PYTHONPATH=src python -m benchmarks.bench_consortium --fast  # N=64
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+from typing import Optional
+
+from benchmarks.common import emit
+
+FULL_N = 256
+FULL_KS = (1, 2, 4, 8)
+FAST_N = 64
+FAST_KS = (1, 4)
+ROUNDS = 2
+
+
+def run_cell(n_nodes: int, k: int, rounds: int = ROUNDS,
+             seed: int = 0) -> dict:
+    """One full BHFL run (FEL + consensus + checkpoints) at committees=K."""
+    from repro import api
+    from repro.sim import Scenario
+
+    scenario = Scenario(
+        name=f"bench_consortium_n{n_nodes}_k{k}",
+        description=f"consortium sweep cell N={n_nodes} K={k}",
+        rounds=rounds, n_nodes=n_nodes, clients_per_node=1,
+        committees=k, checkpoint_interval=2,
+        n_train=512, n_test=64)
+    t0 = time.perf_counter()
+    run = api.run_bhfl(scenario=scenario, seed=seed)
+    wall_s = time.perf_counter() - t0
+    rep = run.scenario_report
+    return {
+        "n_nodes": n_nodes,
+        "committees": k,
+        "rounds": rounds,
+        "seed": seed,
+        "wall_s": round(wall_s, 3),
+        "round_wall_s": round(wall_s / rounds, 3),
+        "liveness": rep.liveness,
+        "completed_rounds": rep.completed_rounds,
+        "safety_violations": rep.safety_violations,
+        "converged": rep.converged,
+        "top_chain_converged": rep.top_chain_converged,
+        "cross_shard_checkpoints": rep.cross_shard_checkpoints,
+    }
+
+
+def sweep(fast: bool = False, seed: int = 0) -> dict:
+    n_nodes = FAST_N if fast else FULL_N
+    ks = FAST_KS if fast else FULL_KS
+    cells = []
+    for k in ks:
+        cell = run_cell(n_nodes, k, seed=seed)
+        cells.append(cell)
+        emit(f"consortium[N={n_nodes},K={k}]",
+             cell["round_wall_s"] * 1e6,
+             f"liveness={cell['liveness']},"
+             f"safety={cell['safety_violations']},"
+             f"checkpoints={cell['cross_shard_checkpoints']}")
+
+    # the headline claim, stated in the artifact: at fixed N, sharding
+    # into K committees cuts round wall-time vs the single committee
+    base = cells[0]
+    sharded = cells[-1]
+    headline = {
+        "n_nodes": n_nodes,
+        "k_base": base["committees"],
+        "k_sharded": sharded["committees"],
+        "round_wall_s_k1": base["round_wall_s"],
+        "round_wall_s_sharded": sharded["round_wall_s"],
+        "speedup": round(base["round_wall_s"]
+                         / max(sharded["round_wall_s"], 1e-9), 2),
+    }
+    return {"bench": "consortium", "seed": seed, "fast": fast,
+            "cells": cells, "headline": headline}
+
+
+def main(argv: Optional[list] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fast", action="store_true",
+                    help=f"CI subset: N={FAST_N}, K={FAST_KS}")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the sweep to this JSON file "
+                         "(BENCH_consortium.json)")
+    args = ap.parse_args(argv)
+    results = sweep(fast=args.fast, seed=args.seed)
+    bad = [c for c in results["cells"]
+           if not c["liveness"] or c["safety_violations"]]
+    if bad:
+        raise SystemExit(f"benchmark cells lost liveness/safety: {bad}")
+    h = results["headline"]
+    if h["speedup"] <= 1.0:
+        raise SystemExit(
+            f"sharding did not reduce round wall-time at N={h['n_nodes']}: "
+            f"K={h['k_base']} {h['round_wall_s_k1']}s vs "
+            f"K={h['k_sharded']} {h['round_wall_s_sharded']}s")
+    print(f"headline: N={h['n_nodes']} round wall-time "
+          f"{h['round_wall_s_k1']}s (K={h['k_base']}) -> "
+          f"{h['round_wall_s_sharded']}s (K={h['k_sharded']}), "
+          f"speedup {h['speedup']}x")
+    if args.json:
+        Path(args.json).write_text(json.dumps(results, indent=2) + "\n")
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,8 +12,10 @@ the repo root by default) holds one entry per grandfathered finding:
 
 Matching is by ``(rule, path, snippet)`` — the stripped source line — so
 entries survive unrelated line drift but die when the flagged line itself
-changes. Every entry MUST carry a non-empty ``justification``; the CLI
-refuses a baseline that doesn't. Unmatched entries are reported as stale
+changes. Every entry MUST carry a non-empty, non-placeholder
+``justification`` (the ``save_baseline`` default ``"TODO: justify or
+fix"`` is rejected at load time); the CLI refuses a baseline that
+doesn't. Unmatched entries are reported as stale
 so the file can't silently rot.
 """
 
@@ -62,10 +64,15 @@ def load_baseline(path: str) -> List[BaselineEntry]:
         if missing:
             raise BaselineError(
                 f"{path}: entry {i} is missing {missing}")
-        if not str(raw["justification"]).strip():
+        justification = str(raw["justification"]).strip()
+        # reject the save_baseline placeholder as hard as an empty string:
+        # a freshly regenerated baseline must not pass the gate until a
+        # human replaces "TODO: justify or fix" with an actual reason
+        if not justification or justification.upper().startswith("TODO"):
             raise BaselineError(
                 f"{path}: entry {i} ({raw['rule']} at {raw['path']}) has "
-                f"an empty justification — every grandfathered finding "
+                f"an empty or placeholder justification "
+                f"({justification!r}) — every grandfathered finding "
                 f"must say why it is acceptable")
         entries.append(BaselineEntry(
             rule=str(raw["rule"]), path=str(raw["path"]),

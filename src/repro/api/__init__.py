@@ -111,7 +111,8 @@ def _default_task(max_rounds: int) -> LearningTask:
 _RUN_BHFL_KWARGS = frozenset((
     "task", "model", "data", "cfg", "n_nodes", "clients_per_node",
     "fel_iterations", "rounds", "engine", "distribution", "gamma", "mu",
-    "seed", "vote_hook", "plagiarists", "on_round", "scenario", "faults"))
+    "seed", "vote_hook", "plagiarists", "on_round", "scenario", "faults",
+    "committees", "checkpoint_interval"))
 # BHFLConfig fields not already exposed as explicit run_bhfl kwargs
 _CFG_OVERRIDES = frozenset(
     f.name for f in dataclasses.fields(BHFLConfig)) - _RUN_BHFL_KWARGS
@@ -169,6 +170,8 @@ def run_bhfl(task: Optional[LearningTask] = None,
              on_round: Optional[Callable[[RoundMetrics], None]] = None,
              scenario: Optional[Any] = None,
              faults: Optional[Any] = None,
+             committees: Optional[int] = None,
+             checkpoint_interval: Optional[int] = None,
              **overrides: Any,
              ) -> BHFLRun:
     """Publish → negotiate → build hierarchy → run PoFEL rounds → settle.
@@ -207,6 +210,15 @@ def run_bhfl(task: Optional[LearningTask] = None,
         faults: a prebuilt ``repro.sim.SimEnv`` for ad-hoc fault
             injection without a registered scenario (mutually exclusive
             with ``scenario``).
+        committees: > 1 shards the run into that many committee-scoped
+            PoFEL instances with cross-shard checkpoint sync
+            (``repro.fl.consortium``). Defaults to the scenario's
+            ``committees`` (1 without a scenario); an explicit value
+            overrides the scenario, so ``committees=1`` runs a consortium
+            scenario as one global committee (the K=1 benchmark
+            baseline).
+        checkpoint_interval: rounds between cross-shard checkpoint
+            epochs; defaults to the scenario's.
         **overrides: ``BHFLConfig`` training fields forwarded by name
             (e.g. ``lr=1e-2``, ``batch_size=16``). An unknown name
             raises ``TypeError`` (with a did-you-mean hint) instead of
@@ -315,7 +327,65 @@ def run_bhfl(task: Optional[LearningTask] = None,
     clusters = build_hierarchy(train, n_nodes, clients_per_node,
                                distribution, seed=seed)
 
-    # 4. FEL + consensus rounds until termination
+    # 4a. sharded consortium: K committee-scoped PoFEL instances with
+    # cross-shard checkpoint sync (repro.fl.consortium). committees=1
+    # (explicit or default) stays on the single-committee path below —
+    # byte-identical to the pre-shard behaviour.
+    k_committees = committees if committees is not None else (
+        sc.committees if sc is not None else 1)
+    if k_committees is not None and k_committees > 1:
+        if faults is not None:
+            raise ValueError(
+                "faults= is unsupported with committees > 1; shape the "
+                "consortium via a Scenario (net / cross_net / adversaries)")
+        from repro.fl.consortium import ConsortiumRuntime
+        from repro.sim import Scenario as _Scenario
+        csc = sc
+        if csc is None:
+            csc = _Scenario(
+                name=f"consortium_k{k_committees}",
+                description="ad-hoc consortium run (api.run_bhfl)",
+                rounds=max_rounds, n_nodes=cfg.n_nodes,
+                clients_per_node=cfg.clients_per_node)
+        if (csc.committees != k_committees
+                or (checkpoint_interval is not None
+                    and csc.checkpoint_interval != checkpoint_interval)):
+            csc = dataclasses.replace(
+                csc, committees=k_committees,
+                committee_sizes=(csc.committee_sizes
+                                 if csc.committees == k_committees
+                                 else None),
+                checkpoint_interval=(checkpoint_interval
+                                     if checkpoint_interval is not None
+                                     else csc.checkpoint_interval))
+        consortium = ConsortiumRuntime(clusters, cfg, test, adapter=adapter,
+                                       scenario=csc, seed=seed)
+        if vote_hook is not None:
+            consortium.set_vote_hook(vote_hook)
+        if plagiarists:
+            consortium.set_plagiarists(plagiarists)
+        run = BHFLRun(task, agreement, rewards, consortium,
+                      consortium.history)
+        for _ in range(min(max_rounds, task.max_rounds)):
+            round_metrics = consortium.run_round()
+            for gid in consortium.last_leaders:
+                rewards.settle_round(gid)
+            if on_round is not None:
+                for m in round_metrics:
+                    on_round(m)
+            losses = [m.test_loss for m in round_metrics
+                      if not np.isnan(m.test_loss)]
+            if test is not None and losses \
+                    and max(losses) <= task.target_loss:
+                break
+        run.scenario_report = consortium.finalize(
+            csc.name, seed, rounds_requested=consortium.rounds_run)
+        rec = get_recorder()
+        if rec.enabled:
+            run.obs = rec.metrics_snapshot()
+        return run
+
+    # 4b. FEL + consensus rounds until termination (single committee)
     runtime = BHFLRuntime(clusters, cfg, test, adapter=adapter)
     runtime.vote_hook = vote_hook
     runtime.plagiarists = set(plagiarists)

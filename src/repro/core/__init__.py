@@ -6,6 +6,7 @@
 - incentive — two-stage Stackelberg game solver
 - phases — Alg. 1 as five composable protocol stages + RoundContext
 - consensus — the PoFEL round orchestrator composing the phases
+- committee — committee-scoped node subsets + cross-shard checkpoints
 - recovery — durable per-node protocol WAL + crash-recovery primitives
 
 Submodule symbols are re-exported lazily (PEP 562) because the blockchain
@@ -23,6 +24,16 @@ _EXPORTS = {
     "verify_envelopes": "repro.core.envelope",
     "Signature": "repro.core.crypto",
     "verify_batch": "repro.core.crypto",
+    "Committee": "repro.core.committee",
+    "CheckpointStatement": "repro.core.committee",
+    "checkpoint_block": "repro.core.committee",
+    "checkpoint_statement_of": "repro.core.committee",
+    "committee_keypair": "repro.core.committee",
+    "committee_seed": "repro.core.committee",
+    "make_checkpoint_validator": "repro.core.committee",
+    "make_committees": "repro.core.committee",
+    "sign_checkpoint": "repro.core.committee",
+    "verify_checkpoint_certificate": "repro.core.committee",
     "Commitment": "repro.core.hcds", "HCDSNode": "repro.core.hcds",
     "HCDSResult": "repro.core.hcds", "Reveal": "repro.core.hcds",
     "run_hcds_round": "repro.core.hcds",

@@ -67,7 +67,8 @@ class PoFELConsensus:
     VoteHook = VoteHook
 
     def __init__(self, n_nodes: int, btsv_cfg: Optional[BTSVConfig] = None,
-                 g_max: float = 0.99, nonce_len: int = 32):
+                 g_max: float = 0.99, nonce_len: int = 32,
+                 committee: Optional[Any] = None):
         # None-default instead of a module-level BTSVConfig() instance in
         # the signature (BTSVConfig is an immutable NamedTuple, so sharing
         # was harmless — this is signature hygiene, not a state fix)
@@ -75,6 +76,17 @@ class PoFELConsensus:
         self.n_nodes = n_nodes
         self.btsv_cfg = btsv_cfg
         self.g_max = g_max
+        # committee scope (repro.core.committee.Committee): when set, this
+        # instance is one shard of a consortium — node ids 0..n-1 here are
+        # committee-LOCAL, and signing keys derive from the members'
+        # GLOBAL ids so no two committees share a key and the consortium
+        # key directory is global-id-keyed. None keeps the classic single
+        # global committee, byte-identical to the pre-shard behaviour.
+        if committee is not None and committee.size != n_nodes:
+            raise ValueError(
+                f"committee {committee.committee_id} has {committee.size} "
+                f"members but consensus was sized for {n_nodes} nodes")
+        self.committee = committee
         # one durable protocol WAL per node: commits/reveals/votes/blocks
         # are logged before signing, so a node restarted through the
         # recovery path (repro.core.recovery) replays instead of
@@ -83,7 +95,15 @@ class PoFELConsensus:
         # assumes. (A simulated amnesia fault detaches its node's WAL.)
         self.wals: Dict[int, NodeWAL] = {i: NodeWAL(i)
                                          for i in range(n_nodes)}
-        self.hcds_nodes = [HCDSNode(i, nonce_len=nonce_len, wal=self.wals[i])
+        if committee is None:
+            keypairs = {i: None for i in range(n_nodes)}
+        else:
+            from repro.core.committee import committee_keypair
+            keypairs = {i: committee_keypair(committee.committee_id,
+                                             committee.global_id(i))
+                        for i in range(n_nodes)}
+        self.hcds_nodes = [HCDSNode(i, keypair=keypairs[i],
+                                    nonce_len=nonce_len, wal=self.wals[i])
                            for i in range(n_nodes)]
         self.public_keys = {n.node_id: n.keypair.public_key for n in self.hcds_nodes}
         # the contract knows the consortium's keys, so vote envelopes are
@@ -167,10 +187,16 @@ class PoFELConsensus:
             g_max=self.g_max,
             vote_hook=vote_hook,
             env=env,
+            committee=self.committee,
         )
         rec = get_recorder()
+        # committee-scoped runs tag their spans so the profiler can drill
+        # per-committee critical paths; the unsharded path stays untagged
+        # (and therefore byte-identical in every trace artifact)
+        com_attrs = ({} if self.committee is None
+                     else {"committee": self.committee.committee_id})
         rec.open_span("consensus", cat="consensus", round=ctx.round,
-                      sim_now=_sim_now(env))
+                      sim_now=_sim_now(env), **com_attrs)
         depth = rec.depth()
         try:
             run_phases(self.phases, ctx,

@@ -33,7 +33,7 @@ from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 from repro.core import crypto
 
-KINDS = ("commit", "reveal", "vote", "block")
+KINDS = ("commit", "reveal", "vote", "block", "checkpoint")
 _DOMAIN = b"pofel-envelope-v1"
 
 

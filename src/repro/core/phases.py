@@ -87,6 +87,12 @@ class RoundContext:
     # networked mode: the fault-injected message bus + adversaries
     # (duck-typed ``repro.sim.network.SimEnv``); None = ideal synchronous
     env: Optional[Any] = None
+    # committee scope (``repro.core.committee.Committee``): set when this
+    # round runs over an explicit node subset inside a sharded consortium
+    # — node ids in this context are committee-local, and observability
+    # tags spans/events with the committee id. None = the classic single
+    # global committee (byte-identical to the pre-shard pipeline).
+    committee: Optional[Any] = None
 
     # CommitReveal
     rejected: Dict[int, str] = field(default_factory=dict)

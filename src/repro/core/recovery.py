@@ -179,6 +179,14 @@ class NodeWAL:
     def log_block(self, round: int, block_hash_hex: str) -> WALRecord:
         return self.append("block", round, block_hash_hex)
 
+    def log_checkpoint(self, epoch: int, statement_digest_hex: str,
+                       ) -> WALRecord:
+        """Record a checkpoint countersignature (keyed by epoch): a member
+        that crashed and rejoined mid-epoch replays its WAL, and signing a
+        *conflicting* checkpoint statement for the same epoch raises
+        :class:`WALConflict` instead of equivocating across shards."""
+        return self.append("checkpoint", epoch, statement_digest_hex)
+
 
 # ---------------------------------------------------------------------------
 # Crash + restart of HCDS state

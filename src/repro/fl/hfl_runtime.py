@@ -103,7 +103,8 @@ class BHFLRuntime:
 
     def __init__(self, clusters: List[FELCluster], cfg: BHFLConfig,
                  test_set: Optional[Any] = None,
-                 adapter: Optional[ModelAdapter] = None):
+                 adapter: Optional[ModelAdapter] = None,
+                 committee: Optional[Any] = None):
         assert len(clusters) == cfg.n_nodes
         if cfg.engine not in ENGINES:
             raise ValueError(f"unknown engine {cfg.engine!r}; "
@@ -112,7 +113,13 @@ class BHFLRuntime:
         self.cfg = cfg
         self.test_set = test_set
         self.adapter = adapter if adapter is not None else cfg.default_adapter()
-        self.consensus = PoFELConsensus(cfg.n_nodes, cfg.btsv, g_max=cfg.g_max)
+        # committee (repro.core.committee.Committee) scopes this runtime to
+        # one shard of a consortium: consensus runs over the committee's
+        # member set with committee-derived signing keys, and round spans
+        # carry the committee id so traces drill per-shard
+        self.committee = committee
+        self.consensus = PoFELConsensus(cfg.n_nodes, cfg.btsv,
+                                        g_max=cfg.g_max, committee=committee)
         self.global_params = self.adapter.init(jax.random.key(cfg.seed))
         self._check_adapter_layout()
         self.history: List[RoundMetrics] = []
@@ -262,7 +269,10 @@ class BHFLRuntime:
         # the top-level round span: its children (begin_round, fel, the
         # consensus span opened inside run_round, adopt_global, evaluate,
         # end_round) account for the round's wall time in the profiler
-        rec.open_span("round", cat="runtime", round=k, sim_env=env)
+        com_attrs = ({} if self.committee is None
+                     else {"committee": self.committee.committee_id})
+        rec.open_span("round", cat="runtime", round=k, sim_env=env,
+                      **com_attrs)
         down: set = set()
         if env is not None:
             with rec.span("begin_round", round=k, sim_env=env):

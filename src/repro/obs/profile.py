@@ -56,8 +56,17 @@ def phase_percentiles(trace: Dict[str, Any],
             if not ev["name"].startswith("phase:"):
                 continue
             d = _dur_ms(ev, clock)
-            if d is not None:
-                buckets.setdefault(ev["name"][len("phase:"):], []).append(d)
+            if d is None:
+                continue
+            name = ev["name"][len("phase:"):]
+            # committee-scoped spans (sharded consortium runs) bucket per
+            # committee — `commit_reveal@c2` — so the summary drills each
+            # committee's critical path; untagged spans keep the plain
+            # name, so single-committee summaries are unchanged
+            cid = ev.get("args", {}).get("committee")
+            if cid is not None:
+                name = f"{name}@c{cid}"
+            buckets.setdefault(name, []).append(d)
     return {name: summarize_values(vals)
             for name, vals in sorted(buckets.items())}
 
@@ -110,6 +119,7 @@ def critical_paths(trace: Dict[str, Any], clock: str = "wall",
                                   "share": other / total})
             out.append({"scenario": label,
                         "round": rnd["args"].get("round"),
+                        "committee": rnd["args"].get("committee"),
                         "total_ms": total,
                         "error": rnd["args"].get("error"),
                         "breakdown": breakdown})
@@ -145,7 +155,10 @@ def format_summary(trace: Dict[str, Any], clock: str = "wall",
         desc = ", ".join(f"{b['share'] * 100:.1f}% {b['name']}"
                          for b in p["breakdown"])
         suffix = f" (error: {p['error']})" if p.get("error") else ""
-        lines.append(f"    round {p['round']}: {p['total_ms']:.3f} ms — "
+        # committee-scoped rounds label their shard; untagged rounds keep
+        # the exact pre-shard line (pinned byte-identical per seed)
+        com = f" [c{p['committee']}]" if p.get("committee") is not None else ""
+        lines.append(f"    round {p['round']}{com}: {p['total_ms']:.3f} ms — "
                      f"{desc}{suffix}")
     return "\n".join(lines) + "\n"
 

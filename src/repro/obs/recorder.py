@@ -245,9 +245,19 @@ def use_recorder(rec: Recorder) -> Iterator[Recorder]:
 def phase_span_before(phase: str, ctx: Any) -> None:
     """Open a ``phase:<name>`` span when a consensus phase starts.
 
-    Read-only with respect to ``ctx`` (RA151): it reads the round number
-    and the env's bus clock, and touches nothing else.
+    Read-only with respect to ``ctx`` (RA151): it reads the round number,
+    the committee scope, and the env's bus clock, and touches nothing
+    else. Committee-scoped rounds tag the span so the profiler can drill
+    per-committee critical paths; unsharded rounds carry no extra attr
+    (their traces stay byte-identical to the pre-shard pipeline).
     """
+    committee = getattr(ctx, "committee", None)
+    if committee is not None:
+        get_recorder().open_span("phase:" + phase, cat="consensus",
+                                 round=ctx.round,
+                                 sim_now=_env_sim_now(ctx.env),
+                                 committee=committee.committee_id)
+        return
     get_recorder().open_span("phase:" + phase, cat="consensus",
                              round=ctx.round, sim_now=_env_sim_now(ctx.env))
 

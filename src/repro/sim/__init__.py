@@ -22,7 +22,8 @@ from repro.sim.adversary import (Adversary, BriberyVoter, CommitWithholder,
                                  LeaderCrash, Plagiarist, RevealEquivocator)
 from repro.sim.network import (ChurnSpec, LinkSpec, NetworkConfig,
                                PartitionSpec, RetrySpec, SimEnv, SimNetwork)
-from repro.sim.report import RoundReport, ScenarioReport
+from repro.sim.report import (CommitteeReport, RoundReport, ScenarioReport,
+                              merge_consortium_report)
 from repro.sim.runner import build_env, run_scenario
 from repro.sim.scenarios import (SCENARIOS, Scenario, get_scenario,
                                  list_scenarios, register)
@@ -30,7 +31,8 @@ from repro.sim.scenarios import (SCENARIOS, Scenario, get_scenario,
 __all__ = [
     "run_scenario", "build_env",
     "Scenario", "SCENARIOS", "get_scenario", "list_scenarios", "register",
-    "ScenarioReport", "RoundReport",
+    "ScenarioReport", "RoundReport", "CommitteeReport",
+    "merge_consortium_report",
     "SimNetwork", "SimEnv", "NetworkConfig", "LinkSpec", "PartitionSpec",
     "ChurnSpec", "RetrySpec",
     "Adversary", "Plagiarist", "BriberyVoter", "CommitWithholder",

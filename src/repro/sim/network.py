@@ -29,7 +29,8 @@ import numpy as np
 from repro.obs import get_recorder
 
 DEFAULT_TIMEOUTS: Mapping[str, float] = {
-    "commit": 60.0, "reveal": 60.0, "vote": 60.0, "block": 90.0}
+    "commit": 60.0, "reveal": 60.0, "vote": 60.0, "block": 90.0,
+    "checkpoint": 90.0}
 
 
 @dataclass(frozen=True)
@@ -137,9 +138,16 @@ class SimNetwork:
     """The bus. One instance simulates all N×N links of a BHFL deployment."""
 
     def __init__(self, n_nodes: int, config: Optional[NetworkConfig] = None,
-                 seed: int = 0):
+                 seed: int = 0, committee: Optional[int] = None):
         self.n_nodes = n_nodes
         self.config = config or NetworkConfig()
+        # committee-scoped buses (one per shard of a consortium) label
+        # their spans/events so intra- vs cross-shard traffic can be told
+        # apart in the trace; None (the unsharded bus) adds no attrs, so
+        # single-committee event logs stay byte-identical
+        self.committee = committee
+        self._tag: Dict[str, Any] = (
+            {} if committee is None else {"committee": committee})
         self.rng = np.random.default_rng(seed)
         self.now = 0.0
         self.round = 0
@@ -236,7 +244,7 @@ class SimNetwork:
         traced = rec.enabled
         if traced:
             rec.open_span("net:" + kind, cat="network", round=self.round,
-                          sim_now=self.now, kind=kind)
+                          sim_now=self.now, kind=kind, **self._tag)
             stat_before = dict(stat)
         queue: List[Tuple[float, int, int, int, int]] = []
         for sender in sorted(payloads):
@@ -258,14 +266,16 @@ class SimNetwork:
                         if traced:
                             rec.event("net_retransmit", round=self.round,
                                       node=sender, sim_ms=send_at, kind=kind,
-                                      recv=recv, attempt=attempt)
+                                      recv=recv, attempt=attempt,
+                                      **self._tag)
                     if (link.drop_rate > 0
                             and self.rng.random() < link.drop_rate):
                         stat["dropped"] += 1
                         if traced:
                             rec.event("net_drop", round=self.round,
                                       node=sender, sim_ms=send_at, kind=kind,
-                                      recv=recv, attempt=attempt)
+                                      recv=recv, attempt=attempt,
+                                      **self._tag)
                         send_at += retry.backoff(attempt)
                         if send_at > deadline:
                             break   # every later copy lands past the deadline
@@ -286,7 +296,7 @@ class SimNetwork:
                 if traced:
                     rec.event("net_timeout", round=self.round, node=sender,
                               sim_ms=at, kind=kind, recv=recv,
-                              bus_seq=bus_seq, attempt=attempt)
+                              bus_seq=bus_seq, attempt=attempt, **self._tag)
                 continue
             stat["delivered"] += 1
             if attempt:
@@ -296,7 +306,7 @@ class SimNetwork:
                 # canonical event order the determinism pin replays
                 rec.event("net_delivery", round=self.round, node=recv,
                           sim_ms=at, kind=kind, sender=sender,
-                          bus_seq=bus_seq, attempt=attempt)
+                          bus_seq=bus_seq, attempt=attempt, **self._tag)
             first_arrival.setdefault(sender, at)    # heap pops in time order
             arrival[(recv, sender)] = at
             deliveries.setdefault(recv, {})[sender] = payloads[sender]
@@ -316,7 +326,7 @@ class SimNetwork:
                 if v:
                     rec.counter(f"net.{kind}.{k}", v)
             rec.event("net_exchange", round=self.round, sim_ms=deadline,
-                      kind=kind, **delta)
+                      kind=kind, **delta, **self._tag)
             rec.close_span(sim_now=deadline, **delta)
         return deliveries
 
@@ -357,7 +367,7 @@ class SimNetwork:
                 if rec.enabled:
                     rec.event("net_gossip_delivery", round=self.round,
                               node=peer, sim_ms=at, kind=kind, sender=sender,
-                              source=source)
+                              source=source, **self._tag)
                 arrival[(peer, sender)] = at
                 deliveries.setdefault(peer, {})[sender] = payloads[sender]
                 if (sender not in first_arrival
@@ -400,7 +410,7 @@ class SimNetwork:
         if rec.enabled:
             rec.event("net_tx_landed", round=self.round, sim_ms=self.now,
                       kind=kind, landed=sorted(landed),
-                      submitted=len(sender_ids))
+                      submitted=len(sender_ids), **self._tag)
         return landed
 
 
@@ -416,9 +426,16 @@ class SimEnv:
 
     def __init__(self, network: SimNetwork,
                  adversaries: Sequence[Any] = (),
-                 quorum: Optional[int] = None, seed: int = 0):
+                 quorum: Optional[int] = None, seed: int = 0,
+                 committee: Optional[Any] = None):
         self.network = network
         n = network.n_nodes
+        # committee scope (repro.core.committee.Committee): set when this
+        # env hosts one shard of a consortium — node ids are then
+        # committee-local and observations are tagged with the committee
+        # id. The default quorum is ⌈2n/3⌉ either way, which for a
+        # committee is ⌈2m/3⌉ over its *member* count.
+        self.committee = committee
         self.quorum = quorum if quorum is not None else math.ceil(2 * n / 3)
         self.rng = np.random.default_rng(seed + 0x5EED)
         self._by_node: Dict[int, Any] = {}
@@ -560,6 +577,8 @@ class SimEnv:
         rec = get_recorder()
         if rec.enabled:
             attrs = dict(data)
+            if self.committee is not None:
+                attrs.setdefault("committee", self.committee.committee_id)
             rec.event(event, round=attrs.pop("round", None),
                       node=attrs.pop("node", None),
                       sim_ms=self.network.now, **attrs)

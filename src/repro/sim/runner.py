@@ -80,10 +80,24 @@ def main(argv: Optional[list] = None) -> int:
     args = ap.parse_args(argv)
 
     if args.list:
-        for name in list_scenarios():
+        # group by topology: single-committee first, then the sharded
+        # consortium scenarios (committees > 1) with their K/N shape
+        singles = [n for n in list_scenarios()
+                   if SCENARIOS[n].committees <= 1]
+        consortiums = [n for n in list_scenarios()
+                       if SCENARIOS[n].committees > 1]
+        print("# single-committee")
+        for name in singles:
             s = SCENARIOS[name]
             flag = " [slow]" if s.slow else ""
             print(f"{name}{flag}: {s.description}")
+        if consortiums:
+            print("# consortium (sharded)")
+            for name in consortiums:
+                s = SCENARIOS[name]
+                flag = " [slow]" if s.slow else ""
+                shape = f" [K={s.committees}, N={s.n_nodes}]"
+                print(f"{name}{flag}{shape}: {s.description}")
         return 0
 
     if args.all:

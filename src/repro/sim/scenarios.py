@@ -16,7 +16,7 @@ curves.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 from repro.sim.adversary import (Adversary, BriberyVoter, CommitWithholder,
                                  CrashRestart, EnvelopeForger, LazyLeader,
@@ -41,6 +41,20 @@ class Scenario:
     n_train: int = 512           # synthetic data sizing (speed, not accuracy)
     n_test: int = 128
     slow: bool = False           # excluded from the CI scenario-smoke job
+    # -- sharded consortium (repro.fl.consortium) ---------------------------
+    # committees > 1 partitions the N nodes into that many committee-scoped
+    # PoFEL instances (contiguous balanced split, or committee_sizes when
+    # given). Node ids in ``adversaries``/``net.churn`` stay GLOBAL and are
+    # remapped into their committee; ``net.partitions`` are unsupported
+    # with committees > 1 (shard the consortium via ``cross_net`` instead).
+    committees: int = 1
+    committee_sizes: Optional[Tuple[int, ...]] = None
+    # rounds between checkpoint epochs (each committee emits a certified
+    # checkpoint block and merges its peers' via the cross-shard bus)
+    checkpoint_interval: int = 2
+    # the K-endpoint cross-shard bus config; None inherits link/retry from
+    # ``net``. Partitions here split *committees*, ids 0..K-1.
+    cross_net: Optional[NetworkConfig] = None
 
 
 SCENARIOS: Dict[str, Scenario] = {}
@@ -227,4 +241,89 @@ register(Scenario(
     adversaries=(BriberyVoter(5, mode="random"),
                  BriberyVoter(6, mode="random"),
                  BriberyVoter(7, mode="random")),
+))
+
+# ---------------------------------------------------------------------------
+# Sharded consortium scenarios: K committee-scoped PoFEL instances with
+# cross-shard checkpoint sync (repro.fl.consortium). Sized so the fast
+# trio fits the CI consortium-smoke job; consortium_256 is the scale run.
+# ---------------------------------------------------------------------------
+
+register(Scenario(
+    name="consortium_64",
+    description="4 committees of 16 over a mildly lossy WAN: each shard "
+                "runs its own PoFEL instance, emits a ≥2/3-certified "
+                "checkpoint every 2 rounds, and merges peers' checkpoints "
+                "on the top-chain — per-committee liveness with zero "
+                "global safety violations.",
+    rounds=4,
+    n_nodes=64,
+    clients_per_node=1,
+    committees=4,
+    checkpoint_interval=2,
+    n_train=256,
+    n_test=64,
+    net=NetworkConfig(link=LinkSpec(base_latency=5.0, jitter=2.0,
+                                    drop_rate=0.01),
+                      retry=RetrySpec(max_retries=2)),
+))
+
+register(Scenario(
+    name="consortium_partitioned",
+    description="4 committees whose cross-shard bus splits 2|2 during the "
+                "middle checkpoint epochs: top-chains fork across the cut "
+                "(each side keeps certifying checkpoints), then heal and "
+                "reconverge via fork choice — concurrent checkpoints under "
+                "a partition are not safety violations.",
+    rounds=4,
+    n_nodes=64,
+    clients_per_node=1,
+    committees=4,
+    checkpoint_interval=1,
+    n_train=256,
+    n_test=64,
+    net=NetworkConfig(retry=RetrySpec(max_retries=2)),
+    cross_net=NetworkConfig(
+        partitions=(PartitionSpec(groups=((0, 1), (2, 3)),
+                                  start_round=1, end_round=3),),
+        retry=RetrySpec(max_retries=2)),
+))
+
+register(Scenario(
+    name="consortium_committee_crash",
+    description="A committee member crashes after voting and stays down "
+                "across a checkpoint epoch: its committee certifies the "
+                "checkpoint without it (quorum is over members, not "
+                "survivors), and the member rejoins mid-epoch via WAL "
+                "replay + ledger re-sync in time to countersign the next "
+                "one.",
+    rounds=4,
+    n_nodes=64,
+    clients_per_node=1,
+    committees=4,
+    checkpoint_interval=2,
+    n_train=256,
+    n_test=64,
+    net=NetworkConfig(retry=RetrySpec(max_retries=2)),
+    adversaries=(CrashRestart(17, at="after_vote", round=1, down_rounds=2),),
+))
+
+register(Scenario(
+    name="consortium_256",
+    description="The scale run: 8 committees of 32 (N=256). Round "
+                "wall-time tracks the committee size (~N/K), not the "
+                "consortium (~N²) — the headline BENCH_consortium.json "
+                "measures; the report must show all-true per-committee "
+                "liveness and zero global safety violations.",
+    rounds=4,
+    n_nodes=256,
+    clients_per_node=1,
+    committees=8,
+    checkpoint_interval=2,
+    n_train=512,
+    n_test=64,
+    net=NetworkConfig(link=LinkSpec(base_latency=5.0, jitter=2.0,
+                                    drop_rate=0.01),
+                      retry=RetrySpec(max_retries=2)),
+    slow=True,
 ))

@@ -626,6 +626,38 @@ def test_baseline_requires_justification(tmp_path):
         load_baseline(str(path))
 
 
+def test_baseline_rejects_placeholder_justification(tmp_path):
+    """The save_baseline default ("TODO: justify or fix") must not pass the
+    loader — regenerating the baseline alone can never silence the gate."""
+    path = tmp_path / "baseline.json"
+    path.write_text(json.dumps({"version": 1, "entries": [{
+        "rule": "RA101", "path": "x.py", "snippet": "y",
+        "justification": "TODO: justify or fix"}]}))
+    with pytest.raises(BaselineError, match="placeholder justification"):
+        load_baseline(str(path))
+    # case and padding don't smuggle it through either
+    path.write_text(json.dumps({"version": 1, "entries": [{
+        "rule": "RA101", "path": "x.py", "snippet": "y",
+        "justification": "  todo — fill this in later  "}]}))
+    with pytest.raises(BaselineError, match="placeholder justification"):
+        load_baseline(str(path))
+
+
+def test_baseline_roundtrip_of_fresh_save_is_rejected(tmp_path):
+    """save_baseline's own default output must fail load_baseline until a
+    human edits the justification in."""
+    bad = textwrap.dedent("""
+        import numpy as np
+        def pick():
+            return np.random.randint(10)
+    """)
+    report = run(bad)
+    path = tmp_path / "baseline.json"
+    save_baseline(str(path), report.findings)   # default placeholder
+    with pytest.raises(BaselineError, match="placeholder justification"):
+        load_baseline(str(path))
+
+
 def test_repo_baseline_entries_all_carry_justifications():
     entries = load_baseline(os.path.join(REPO_ROOT,
                                          "analysis-baseline.json"))
